@@ -1,0 +1,131 @@
+"""Roofline report: reads results/dryrun/*.json, prints the per-cell table
+(§Roofline) and the hillclimb-candidate ranking.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+  PYTHONPATH=src python -m benchmarks.roofline --markdown   # EXPERIMENTS.md table
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+HBM_LIMIT = 16e9  # v5e per-chip HBM
+
+
+def load(dir_: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*", "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.2f}us"
+
+
+def mem_flag(row: Dict) -> str:
+    mem = row.get("memory", {})
+    total = (mem.get("temp_size_in_bytes", 0) +
+             mem.get("argument_size_in_bytes", 0))
+    return "OVER" if total > HBM_LIMIT else "fits"
+
+
+def table(rows: List[Dict], markdown: bool = False) -> None:
+    hdr = ("mesh", "arch", "shape", "compute", "memory", "mem*", "collective",
+           "bottleneck", "useful", "roofline", "hbm")
+    if markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(f"{'mesh':8s} {'arch':18s} {'shape':12s} {'compute':9s} "
+              f"{'memory':9s} {'mem*':9s} {'collect':9s} {'bneck':10s} "
+              f"{'useful':6s} {'roofl':6s} hbm")
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if r.get("overrides"):
+            continue  # perf-iteration variants reported separately
+        adj = r.get("memory_s_kernel_adjusted", r["memory_s"])
+        vals = (r["mesh"], r["arch"], r["shape"], fmt_s(r["compute_s"]),
+                fmt_s(r["memory_s"]), fmt_s(adj), fmt_s(r["collective_s"]),
+                r["bottleneck"], f"{r['useful_flops_fraction']:.2f}",
+                f"{r['roofline_fraction']:.3f}", mem_flag(r))
+        if markdown:
+            print("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            print(f"{vals[0]:8s} {vals[1]:18s} {vals[2]:12s} {vals[3]} "
+                  f"{vals[4]} {vals[5]} {vals[6]} {vals[7]:10s} {vals[8]:6s} "
+                  f"{vals[9]:6s} {vals[10]}")
+    print("\n(mem* = kernel-adjusted memory term: HBM traffic minus "
+          "named_scope('flash_attention') intermediates, which the Pallas "
+          "kernel keeps in VMEM on TPU — EXPERIMENTS.md §Perf #10)")
+
+
+def compare(old_rows: List[Dict], new_rows: List[Dict]) -> None:
+    """Baseline vs optimized (§Perf summary)."""
+    key = lambda r: (r["mesh"], r["arch"], r["shape"])
+    old = {key(r): r for r in old_rows if not r.get("overrides")}
+    print(f"{'mesh':8s} {'arch':18s} {'shape':12s} "
+          f"{'dominant term: before -> after':34s} {'roofline: before -> after'}")
+    for r in sorted(new_rows, key=key):
+        if r.get("overrides") or key(r) not in old:
+            continue
+        o = old[key(r)]
+        dom_o = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        dom_n = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        speedup = dom_o / dom_n if dom_n else float("inf")
+        print(f"{r['mesh']:8s} {r['arch']:18s} {r['shape']:12s} "
+              f"{fmt_s(dom_o)} -> {fmt_s(dom_n)}  ({speedup:5.2f}x)   "
+              f"{o['roofline_fraction']:.3f} -> {r['roofline_fraction']:.3f}")
+
+
+def hillclimb_candidates(rows: List[Dict]) -> None:
+    """The three selection criteria from the assignment."""
+    base = [r for r in rows if r["mesh"] == "16x16" and not r.get("overrides")]
+    if not base:
+        return
+    worst = min(base, key=lambda r: r["roofline_fraction"])
+    coll = max(base, key=lambda r: r["collective_s"] /
+               max(r["compute_s"] + r["memory_s"], 1e-12))
+    train = [r for r in base if r["shape"] == "train_4k"]
+    rep = max(train, key=lambda r: r["n_params_total"]) if train else worst
+    print("\nhillclimb candidates:")
+    print(f"  worst roofline fraction : {worst['arch']} {worst['shape']} "
+          f"({worst['roofline_fraction']:.4f})")
+    print(f"  most collective-bound   : {coll['arch']} {coll['shape']} "
+          f"(coll {fmt_s(coll['collective_s'])})")
+    print(f"  most representative     : {rep['arch']} {rep['shape']} "
+          f"(largest RAR training job, {rep['n_params_total'] / 1e9:.0f}B)")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="results/dryrun")
+    p.add_argument("--baseline-dir", default="results/dryrun_baseline")
+    p.add_argument("--markdown", action="store_true")
+    p.add_argument("--compare", action="store_true",
+                   help="baseline vs optimized dominant-term speedups")
+    args = p.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print("no dry-run results found; run python -m repro.launch.dryrun")
+        return
+    if args.compare:
+        old = load(args.baseline_dir)
+        compare(old, rows)
+        return
+    table(rows, markdown=args.markdown)
+    if not args.markdown:
+        hillclimb_candidates(rows)
+
+
+if __name__ == "__main__":
+    main()

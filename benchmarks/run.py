@@ -1,0 +1,207 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figures:
+
+  fig4  total utility vs number of jobs: GADGET vs FIFO / DRF / LAS
+  fig5  embedded ratio vs node (GPU) capacity
+  fig6  embedded ratio vs edge (bandwidth) capacity
+  fig7  G-VNE approximation ratio vs exact branch-and-bound (HiGHS)
+  eq1   RAR iteration-time model table (paper §III-3)
+
+Scale note: the paper uses S=50, T=200; the default here is a proportionally
+scaled instance so the whole suite runs in minutes on one CPU core. Pass
+``--full`` for paper-scale settings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster import make_fat_tree
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.topology import ResourceState
+from repro.cluster.trace import JobTraceConfig, generate_jobs
+from repro.core.baselines import DrfScheduler, FifoScheduler, LasScheduler
+from repro.core.gadget import GadgetScheduler
+from repro.core.gvne import GvneConfig, solve_slot, solve_slot_exact
+from repro.core.problem import DDLJSInstance, ScheduleState
+from repro.core.rar_model import profile_from_arch, rar_iteration_time
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _schedulers(seed: int = 0):
+    return [
+        ("gadget", lambda: GadgetScheduler(GvneConfig(seed=seed))),
+        # paper-faithful static baselines (workers fixed in [1,10], no adapt)
+        ("fifo", lambda: FifoScheduler(seed=seed)),
+        ("drf", lambda: DrfScheduler(seed=seed)),
+        ("las", lambda: LasScheduler(seed=seed)),
+        # beyond-paper strengthened elastic baselines
+        ("drf+elastic", lambda: DrfScheduler(seed=seed, elastic=True)),
+        ("las+elastic", lambda: LasScheduler(seed=seed, elastic=True)),
+    ]
+
+
+def fig4_total_utility(full: bool = False) -> None:
+    """Paper Fig. 4: total utility vs number of jobs."""
+    n_servers = 50 if full else 16
+    horizon = 200 if full else 60
+    job_counts = [20, 40, 60, 80, 100] if full else [15, 30, 60, 90]
+    for n_jobs in job_counts:
+        graph = make_fat_tree(n_servers=n_servers, seed=1)
+        jobs = generate_jobs(JobTraceConfig(
+            n_jobs=n_jobs, horizon=horizon,
+            mean_interarrival=horizon / max(n_jobs, 1), seed=2))
+        inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
+        for name, mk in _schedulers():
+            t0 = time.perf_counter()
+            res = ClusterSimulator(inst).run(mk())
+            dt = (time.perf_counter() - t0) * 1e6 / horizon
+            emit(f"fig4/{name}/jobs={n_jobs}", dt,
+                 f"total_utility={res.total_utility:.2f}")
+
+
+def fig4b_heavy_load(full: bool = False) -> None:
+    """Fig. 4 variant at genuine scarcity (jobs need ~10x more iterations than
+    the cluster can deliver over the horizon) — the regime where scheduling
+    policy separates. GADGET's utility-aware allocation should dominate."""
+    n_servers = 50 if full else 16
+    horizon = 100 if full else 50
+    job_counts = [60, 120] if full else [40, 80]
+    for n_jobs in job_counts:
+        graph = make_fat_tree(n_servers=n_servers, seed=1)
+        jobs = generate_jobs(JobTraceConfig(
+            n_jobs=n_jobs, horizon=horizon,
+            mean_interarrival=horizon / (2.0 * n_jobs),
+            zeta_range=(20, 100),
+            expected_iters_range=(3000, 30000),
+            sensitivity_range=(0.0005, 0.005),
+            seed=5))
+        inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
+        for name, mk in _schedulers():
+            t0 = time.perf_counter()
+            res = ClusterSimulator(inst).run(mk())
+            dt = (time.perf_counter() - t0) * 1e6 / horizon
+            emit(f"fig4b/{name}/jobs={n_jobs}", dt,
+                 f"total_utility={res.total_utility:.2f}")
+
+
+def _capacity_sweep(kind: str, scales, full: bool) -> None:
+    n_servers = 50 if full else 16
+    horizon = 100 if full else 40
+    n_jobs = 60 if full else 30
+    trials = 3
+    for scale in scales:
+        ratios = []
+        dt_us = 0.0
+        for trial in range(trials):
+            graph = make_fat_tree(n_servers=n_servers, seed=10 + trial)
+            if kind == "node":
+                # scale GPU capacity per server
+                from repro.cluster.topology import Server, SubstrateGraph, Link
+
+                servers = [
+                    Server(s.id, s.rack,
+                           {r: v * scale for r, v in s.caps.items()})
+                    for s in graph.servers
+                ]
+                links = [Link(u, v, c) for (u, v), c in graph.links.items()]
+                graph = SubstrateGraph(servers, links, graph.n_racks, graph.n_core)
+            else:
+                # scale link bandwidth
+                for e in list(graph.links):
+                    graph.links[e] *= scale
+            jobs = generate_jobs(JobTraceConfig(
+                n_jobs=n_jobs, horizon=horizon,
+                mean_interarrival=horizon / n_jobs, seed=20 + trial))
+            inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
+            t0 = time.perf_counter()
+            res = ClusterSimulator(inst).run(GadgetScheduler(GvneConfig(seed=trial)))
+            dt_us += (time.perf_counter() - t0) * 1e6 / horizon
+            ratios.append(res.embedded_ratio())
+        emit(f"fig{'5' if kind == 'node' else '6'}/capacity_x{scale}",
+             dt_us / trials, f"embedded_ratio={np.mean(ratios):.4f}")
+
+
+def fig5_node_capacity(full: bool = False) -> None:
+    """Paper Fig. 5: embedded ratio vs node resource capacity."""
+    _capacity_sweep("node", [0.5, 1.0, 2.0, 4.0], full)
+
+
+def fig6_edge_capacity(full: bool = False) -> None:
+    """Paper Fig. 6: embedded ratio vs edge resource capacity."""
+    _capacity_sweep("edge", [0.02, 0.1, 0.5, 1.0], full)
+
+
+def fig7_approx_ratio(full: bool = False) -> None:
+    """Paper Fig. 7: per-slot G-VNE utility / exact optimum (HiGHS B&B)."""
+    n_inst = 10 if full else 6
+    ratios = []
+    dt_us = 0.0
+    for seed in range(n_inst):
+        graph = make_fat_tree(n_servers=5, n_racks=2, n_core=1, seed=seed)
+        jobs = generate_jobs(JobTraceConfig(n_jobs=5, horizon=5, seed=seed + 100))
+        for j in jobs:
+            j.arrival = 0
+            j.max_workers = min(j.max_workers, 3)
+        inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=5)
+        state = ScheduleState(inst)
+        t0 = time.perf_counter()
+        approx = solve_slot(ResourceState(graph), jobs, state,
+                            GvneConfig(seed=seed, n_candidates=8))
+        dt_us += (time.perf_counter() - t0) * 1e6
+        exact = solve_slot_exact(ResourceState(graph), jobs, state, max_servers=3)
+        if exact.value > 1e-9:
+            ratios.append(approx.value / exact.value)
+    emit("fig7/gvne_vs_exact", dt_us / n_inst,
+         f"mean_ratio={np.mean(ratios):.3f};min={np.min(ratios):.3f};"
+         f"max={np.max(ratios):.3f};n={len(ratios)}")
+
+
+def eq1_rar_time_model(full: bool = False) -> None:
+    """§III-3 table: tau(w) for a 1.2B-param job on v5e constants."""
+    prof = profile_from_arch(n_params=1.2e9, tokens_per_batch=4096 * 8)
+    for w in (1, 2, 4, 8, 16, 32):
+        t0 = time.perf_counter()
+        tau = float(prof.iteration_time(w))
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"eq1/tau_w={w}", dt, f"tau_s={tau:.4f}")
+
+
+FIGS = {
+    "fig4": fig4_total_utility,
+    "fig4b": fig4b_heavy_load,
+    "fig5": fig5_node_capacity,
+    "fig6": fig6_edge_capacity,
+    "fig7": fig7_approx_ratio,
+    "eq1": eq1_rar_time_model,
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--only", nargs="*", choices=sorted(FIGS), default=None)
+    parser.add_argument("--full", action="store_true",
+                        help="paper-scale settings (slow)")
+    args = parser.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in FIGS.items():
+        if args.only and name not in args.only:
+            continue
+        fn(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

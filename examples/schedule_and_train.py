@@ -1,0 +1,107 @@
+"""End-to-end: GADGET schedules real JAX training jobs (the paper's loop).
+
+GADGET's per-slot decisions (ring size w per job) drive *actual* elastic
+ring-all-reduce data-parallel training of reduced-config models on host
+devices: each slot reshapes the DP mesh to the scheduled worker count,
+gradients flow through the paper's ppermute Share-Reduce/Share-Only ring,
+and preempted slots park the job on a checkpoint.
+
+Usage:  PYTHONPATH=src python examples/schedule_and_train.py
+(sets its own XLA_FLAGS before importing jax — run as its own process)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import tempfile
+
+import numpy as np
+
+from repro.cluster import make_fat_tree
+from repro.cluster.topology import ResourceState
+from repro.core.gadget import GadgetScheduler
+from repro.core.gvne import GvneConfig
+from repro.core.problem import DDLJSInstance, Job, ScheduleState
+from repro.core.rar_model import profile_from_arch
+from repro.core.utility import sqrt_utility
+from repro.configs import get_arch
+from repro.data.pipeline import SyntheticTokens
+from repro.models.model import build_model
+from repro.training.elastic import ElasticTrainer, SlotPlan
+from repro.training.optimizer import make_optimizer
+
+ARCHS = ["qwen3-0.6b", "granite-3-2b", "rwkv6-7b"]
+SLOTS = 6
+STEPS_PER_SLOT = 4
+
+
+def make_jobs():
+    jobs = []
+    for i, arch in enumerate(ARCHS):
+        cfg = get_arch(arch)
+        prof = profile_from_arch(n_params=float(cfg.n_params()),
+                                 tokens_per_batch=4096.0 * 8)
+        jobs.append(Job(
+            id=i, arrival=i % 2, max_workers=4,
+            demands={"gpus": 1.0, "mem": 1.0},
+            budgets={"gpus": 40.0},
+            bandwidth=1e9,
+            zeta=float(prof.iterations_per_slot(4, 60.0)) / 4.0,
+            utility=sqrt_utility(10.0),
+            profile=prof, arch=arch,
+        ))
+    return jobs
+
+
+def main() -> None:
+    graph = make_fat_tree(n_servers=4, n_racks=2, n_core=1,
+                          gpus_choices=(2, 4), seed=0)
+    jobs = make_jobs()
+    inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=SLOTS)
+    state = ScheduleState(inst)
+    scheduler = GadgetScheduler(GvneConfig(seed=0))
+
+    trainers = {}
+    for job in jobs:
+        cfg = get_arch(job.arch).reduced()
+        model = build_model(cfg)
+        data = SyntheticTokens(cfg.vocab, seq_len=32, global_batch=8,
+                               seed=job.id)
+        trainers[job.id] = ElasticTrainer(
+            model, make_optimizer("adamw"), data, global_batch=8,
+            base_lr=3e-3, mode="ring",
+            checkpoint_dir=tempfile.mkdtemp(prefix=f"job{job.id}_"))
+
+    print(f"== GADGET driving elastic RAR training of {ARCHS} ==")
+    for t in range(SLOTS):
+        res = ResourceState(graph)
+        decision = scheduler.schedule_slot(t, res, state)
+        state.commit_slot(decision.embeddings)
+        workers = {e.job_id: e.n_workers for e in decision.embeddings}
+        line = []
+        for job in jobs:
+            w = workers.get(job.id, 0)
+            if t < job.arrival:
+                line.append(f"{job.arch}: not-arrived")
+                continue
+            out = trainers[job.id].run_slot(
+                SlotPlan(workers=w, steps=STEPS_PER_SLOT if w else 0))
+            tag = (f"w={w} loss={out['loss']:.3f}" if w
+                   else "preempted(ckpt)")
+            line.append(f"{job.arch}: {tag}")
+        print(f" slot {t}: " + " | ".join(line))
+
+    print("\n== outcome ==")
+    for job in jobs:
+        tr = trainers[job.id]
+        first = tr.losses[0] if tr.losses else float("nan")
+        last = tr.losses[-1] if tr.losses else float("nan")
+        print(f"  {job.arch}: steps={tr.step} loss {first:.3f} -> {last:.3f} "
+              f"(reshards={tr.resharding_events}, "
+              f"worker-time={state.z[job.id]:.0f})")
+        assert not tr.losses or last < first + 1e-6, "training should improve"
+
+
+if __name__ == "__main__":
+    main()

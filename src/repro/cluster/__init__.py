@@ -1,0 +1,12 @@
+"""Cluster substrate: fat-tree topology, traces, and the time-slotted simulator."""
+
+from repro.cluster.topology import (  # noqa: F401
+    Embedding,
+    Link,
+    ResourceState,
+    Server,
+    SubstrateGraph,
+    make_fat_tree,
+)
+from repro.cluster.trace import JobTraceConfig, generate_jobs  # noqa: F401
+from repro.cluster.simulator import ClusterSimulator, SimResult  # noqa: F401

@@ -1,0 +1,39 @@
+"""Comparison metrics across schedulers (feeds the paper's Fig. 4-6)."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.cluster.simulator import SimResult
+
+
+def summarize(results: Sequence[SimResult]) -> List[Dict[str, float]]:
+    rows = []
+    for r in results:
+        rows.append(
+            {
+                "scheduler": r.scheduler,
+                "total_utility": round(r.total_utility, 3),
+                "embedded_ratio": round(r.embedded_ratio(), 4),
+                "avg_jct_slots": round(r.avg_jct(), 2),
+                "mean_gpu_util": round(
+                    float(np.mean([rec.gpu_utilization for rec in r.records])), 4
+                ),
+                "worker_time_total": round(
+                    float(sum(rec.effective_worker_time for rec in r.records)), 1
+                ),
+            }
+        )
+    return rows
+
+
+def csv_lines(rows: List[Dict[str, float]]) -> List[str]:
+    if not rows:
+        return []
+    keys = list(rows[0])
+    out = [",".join(keys)]
+    for row in rows:
+        out.append(",".join(str(row[k]) for k in keys))
+    return out

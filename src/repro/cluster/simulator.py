@@ -1,0 +1,148 @@
+"""Time-slotted cluster simulator — drives any scheduler over a job trace.
+
+Generalizes the plain horizon loop with the failure modes a 1000+-node
+deployment must survive (DESIGN.md §8):
+
+  * **server failures**: a failed server contributes zero capacity for a
+    geometric repair period; embeddings scheduled onto it that slot lose the
+    slot's progress (the job resumes from its last checkpoint — the paper's
+    preemptive-job assumption).
+  * **stragglers**: a straggling server runs at ``straggler_factor`` speed;
+    a synchronous ring runs at the slowest member (Eq. (1) with reduced G),
+    so the slot's effective worker-time is scaled down for the whole ring.
+  * **preemption**: embeddings last exactly one slot; the scheduler freely
+    reshapes rings between slots (elastic worker counts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.topology import Embedding, ResourceState, SubstrateGraph
+from repro.core.problem import DDLJSInstance, Job, ScheduleState
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    server_fail_prob: float = 0.0      # per-server per-slot failure prob
+    repair_prob: float = 0.5           # per-slot repair prob once failed
+    straggler_prob: float = 0.0        # per-server per-slot straggle prob
+    straggler_factor: float = 0.4      # relative speed when straggling
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SlotRecord:
+    t: int
+    n_active: int
+    n_embedded: int
+    workers_placed: int
+    effective_worker_time: float
+    utility_total: float
+    gpu_utilization: float
+    failed_servers: int
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheduler: str
+    records: List[SlotRecord]
+    state: ScheduleState
+    completion_slot: Dict[int, Optional[int]]
+
+    @property
+    def total_utility(self) -> float:
+        return self.state.total_utility()
+
+    def embedded_ratio(self) -> float:
+        num = sum(r.n_embedded for r in self.records)
+        den = sum(r.n_active for r in self.records)
+        return num / den if den else 0.0
+
+    def avg_jct(self) -> float:
+        jcts = [
+            c - self.state.inst.job(j).arrival + 1
+            for j, c in self.completion_slot.items()
+            if c is not None
+        ]
+        return float(np.mean(jcts)) if jcts else float("nan")
+
+
+class ClusterSimulator:
+    def __init__(self, inst: DDLJSInstance, faults: Optional[FaultConfig] = None):
+        self.inst = inst
+        self.faults = faults or FaultConfig()
+        self.rng = np.random.default_rng(self.faults.seed)
+
+    def run(self, scheduler) -> SimResult:
+        inst = self.inst
+        state = ScheduleState(inst)
+        failed: Dict[int, bool] = {s.id: False for s in inst.graph.servers}
+        straggling: Dict[int, bool] = {s.id: False for s in inst.graph.servers}
+        records: List[SlotRecord] = []
+        completion: Dict[int, Optional[int]] = {j.id: None for j in inst.jobs}
+
+        for t in range(inst.horizon):
+            # fault dynamics
+            for sid in failed:
+                if failed[sid]:
+                    if self.rng.random() < self.faults.repair_prob:
+                        failed[sid] = False
+                elif self.rng.random() < self.faults.server_fail_prob:
+                    failed[sid] = True
+                straggling[sid] = (
+                    not failed[sid]
+                    and self.rng.random() < self.faults.straggler_prob
+                )
+
+            res = ResourceState(inst.graph)
+            for sid, down in failed.items():
+                if down:  # zero out capacity of failed servers
+                    for r in res.free_node[sid]:
+                        res.free_node[sid][r] = 0.0
+
+            # contract: scheduler commits returned embeddings into res itself
+            decision = scheduler.schedule_slot(t, res, state)
+
+            committed: List[Embedding] = []
+            effective = 0.0
+            placed = 0
+            for e in decision.embeddings:
+                assert e.job_id in res.committed, "scheduler must commit embeddings"
+                placed += e.n_workers
+                # straggler: synchronous ring runs at slowest member's speed
+                factor = 1.0
+                for s in e.servers:
+                    if straggling[s]:
+                        factor = min(factor, self.faults.straggler_factor)
+                committed.append(e)
+                effective += factor * e.n_workers
+                # z accounting with straggler-scaled effective worker-time
+                state.z[e.job_id] += factor * e.n_workers
+                state.history[e.job_id].append(e)
+
+            for j in inst.jobs:
+                if completion[j.id] is None and state.remaining(j) <= 1e-9:
+                    completion[j.id] = t
+
+            records.append(
+                SlotRecord(
+                    t=t,
+                    n_active=decision.n_active,
+                    n_embedded=len(committed),
+                    workers_placed=placed,
+                    effective_worker_time=effective,
+                    utility_total=state.total_utility(),
+                    gpu_utilization=res.utilization().get("gpus", 0.0),
+                    failed_servers=sum(failed.values()),
+                )
+            )
+        return SimResult(
+            scheduler=getattr(scheduler, "name", type(scheduler).__name__),
+            records=records,
+            state=state,
+            completion_slot=completion,
+        )

@@ -1,0 +1,32 @@
+"""GADGET core: the paper's contribution (analytical model + algorithms)."""
+
+from repro.core.rar_model import (  # noqa: F401
+    RarJobProfile,
+    optimal_worker_count,
+    profile_from_arch,
+    rar_allreduce_time,
+    rar_iteration_time,
+    rar_iteration_time_asymptote,
+    rar_ring_bytes_per_worker,
+)
+from repro.core.utility import (  # noqa: F401
+    Utility,
+    energy_utility,
+    log_utility,
+    sigmoid_utility,
+    sqrt_utility,
+)
+from repro.core.problem import DDLJSInstance, Job, ScheduleState  # noqa: F401
+from repro.core.gvne import (  # noqa: F401
+    GvneConfig,
+    GvneResult,
+    solve_slot,
+    solve_slot_exact,
+)
+from repro.core.gadget import GadgetScheduler, run_offline_horizon  # noqa: F401
+from repro.core.baselines import (  # noqa: F401
+    BASELINES,
+    DrfScheduler,
+    FifoScheduler,
+    LasScheduler,
+)

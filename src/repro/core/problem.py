@@ -1,0 +1,95 @@
+"""DDLJS problem structures — paper §IV.
+
+A :class:`Job` carries the per-worker demands l_i^r, the budgets F_i^r, the
+per-slot worker cap N_i, the reserved ring bandwidth b_i, the per-worker
+efficiency zeta_i (iterations per worker-slot via Eq. (1)), and the utility
+mu_i. :class:`DDLJSInstance` bundles jobs + substrate + horizon.
+
+Scheduling state (the z_{i,t} accumulators of §V-B) lives in
+:class:`ScheduleState`, shared by GADGET and all baselines so metrics are
+directly comparable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.cluster.topology import Embedding, ResourceState, SubstrateGraph
+from repro.core.rar_model import RarJobProfile
+from repro.core.utility import Utility
+
+
+@dataclasses.dataclass
+class Job:
+    id: int
+    arrival: int                      # a_i (slot index; unknown to scheduler)
+    max_workers: int                  # N_i — per-slot concurrent worker cap
+    demands: Dict[str, float]         # l_i^r per worker
+    budgets: Dict[str, float]         # F_i^r total type-r budget
+    bandwidth: float                  # b_i reserved ring bandwidth
+    zeta: float                       # per-worker efficiency (e.g. iters/worker-slot)
+    utility: Utility
+    profile: Optional[RarJobProfile] = None  # Eq. (1) profile when derived from an arch
+    arch: Optional[str] = None        # assigned architecture id, if any
+
+    def worker_time_budget(self) -> float:
+        """min_r F_i^r / l_i^r — the bottleneck worker-time budget (Eq. (11))."""
+        lim = float("inf")
+        for r, l in self.demands.items():
+            if l > 0 and r in self.budgets:
+                lim = min(lim, self.budgets[r] / l)
+        return lim
+
+
+@dataclasses.dataclass
+class DDLJSInstance:
+    graph: SubstrateGraph
+    jobs: List[Job]
+    horizon: int                      # T
+    slot_seconds: float = 1.0
+
+    def job(self, jid: int) -> Job:
+        return self._by_id()[jid]
+
+    def _by_id(self) -> Dict[int, Job]:
+        if not hasattr(self, "_jmap"):
+            self._jmap = {j.id: j for j in self.jobs}
+        return self._jmap
+
+
+class ScheduleState:
+    """Accumulated worker-time z_{i,t} and the active-set logic of §V-B."""
+
+    def __init__(self, inst: DDLJSInstance):
+        self.inst = inst
+        self.z: Dict[int, float] = {j.id: 0.0 for j in inst.jobs}
+        self.history: Dict[int, List[Embedding]] = {j.id: [] for j in inst.jobs}
+        self.utility_cache: Dict[int, float] = {}
+
+    def remaining(self, job: Job) -> float:
+        """Remaining worker-time: (min_r F_i^r / l_i^r) - z_{i,t-1} (Eq. (11))."""
+        return max(0.0, job.worker_time_budget() - self.z[job.id])
+
+    def active_jobs(self, t: int) -> List[Job]:
+        """I[t] = {i : t >= a_i and z_{i,t-1} < min_r F_i^r / l_i^r}."""
+        return [
+            j for j in self.inst.jobs
+            if t >= j.arrival and self.remaining(j) > 1e-9
+        ]
+
+    def commit_slot(self, embeddings: List[Embedding]) -> None:
+        for e in embeddings:
+            self.z[e.job_id] += e.n_workers
+            self.history[e.job_id].append(e)
+
+    def job_utility(self, job: Job) -> float:
+        return job.utility(job.zeta * self.z[job.id])
+
+    def total_utility(self) -> float:
+        return sum(self.job_utility(j) for j in self.inst.jobs)
+
+    def marginal_utility(self, job: Job, extra_workers: int) -> float:
+        """pi_{i,kappa}: mu(zeta(z + kappa)) - mu(zeta z) — §V-C."""
+        base = job.zeta * self.z[job.id]
+        return job.utility.marginal(base, job.zeta * extra_workers)

@@ -1,0 +1,200 @@
+"""Analytical model for ring-all-reduce (RAR) DDL training — paper §III.
+
+Implements Eq. (1): the per-iteration training time of a w-worker RAR job,
+
+    tau(w) = d(w-1)/w * (2/b + 1/G) + t_f * M + t_b + gamma
+
+and its inverse (iterations per unit time), which instantiates the
+"excessive training avoidance" per-worker efficiency ``zeta_i`` of §IV.
+All quantities use SI base units: d in parameters (grad elements), b in
+elements/second (bandwidth divided by element width), G in elements/second
+reduction throughput, times in seconds.
+
+The functions are plain-float *and* jnp-compatible so the scheduler can run
+vectorized sweeps over (job, worker-count) grids on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = Union[float, np.ndarray, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class RarJobProfile:
+    """Static profile of one RAR training job (inputs to Eq. (1)).
+
+    Attributes:
+      d: model/gradient size in elements (the paper's ``d``).
+      bandwidth: per-link worker<->worker bandwidth in elements/sec (``b``).
+      reduce_speed: per-worker reduction throughput in elements/sec (``G``).
+      t_fwd_per_sample: per-sample forward time ``t^f`` (seconds).
+      t_bwd: backward time ``t^b`` (seconds; batch-independent per paper).
+      batch_size: mini-batch size ``M``.
+      overhead: per-iteration negotiation/ACK latency ``gamma`` (seconds).
+    """
+
+    d: float
+    bandwidth: float
+    reduce_speed: float
+    t_fwd_per_sample: float
+    t_bwd: float
+    batch_size: float
+    overhead: float = 0.0
+
+    def iteration_time(self, w: Array) -> Array:
+        return rar_iteration_time(
+            w,
+            d=self.d,
+            bandwidth=self.bandwidth,
+            reduce_speed=self.reduce_speed,
+            t_fwd_per_sample=self.t_fwd_per_sample,
+            t_bwd=self.t_bwd,
+            batch_size=self.batch_size,
+            overhead=self.overhead,
+        )
+
+    def iterations_per_slot(self, w: Array, slot_seconds: float) -> Array:
+        """zeta_i: training iterations per time slot per Eq. (1) inverted."""
+        return slot_seconds / self.iteration_time(w)
+
+
+def rar_ring_bytes_per_worker(d: float, w: Array, elem_bytes: int = 4) -> Array:
+    """Total wire bytes each worker sends in one all-reduce: 2d(w-1)/w."""
+    if isinstance(w, (int, float)):
+        return 2.0 * d * (w - 1.0) / max(w, 1.0) * elem_bytes
+    w = jnp.asarray(w, dtype=jnp.float32)
+    return 2.0 * d * (w - 1.0) / jnp.maximum(w, 1.0) * elem_bytes
+
+
+def rar_allreduce_time(w: Array, d: float, bandwidth: float, reduce_speed: float) -> Array:
+    """Time of one RAR collective: d(w-1)/w * (2/b + 1/G) — paper §III-3.
+
+    Share-Reduce phase: (w-1) steps, each sends d/w and reduces d/w.
+    Share-Only phase:   (w-1) steps, each sends d/w.
+    """
+    if isinstance(w, (int, float)):
+        if w <= 1:
+            return 0.0
+        return d * (w - 1.0) / w * (2.0 / bandwidth + 1.0 / reduce_speed)
+    w = jnp.asarray(w, dtype=jnp.float32)
+    t = d * (w - 1.0) / jnp.maximum(w, 1.0) * (2.0 / bandwidth + 1.0 / reduce_speed)
+    return jnp.where(w <= 1.0, 0.0, t)
+
+
+def rar_iteration_time(
+    w: Array,
+    *,
+    d: float,
+    bandwidth: float,
+    reduce_speed: float,
+    t_fwd_per_sample: float,
+    t_bwd: float,
+    batch_size: float,
+    overhead: float = 0.0,
+) -> Array:
+    """Eq. (1): per-iteration RAR training time.
+
+    ``w`` may be a scalar or an array of candidate worker counts; w <= 1
+    degenerates to compute-only time (no ring traffic), matching the paper's
+    single-worker case.
+    """
+    comm = rar_allreduce_time(w, d, bandwidth, reduce_speed)
+    compute = t_fwd_per_sample * batch_size + t_bwd
+    return comm + compute + overhead
+
+
+def rar_iteration_time_asymptote(
+    *,
+    d: float,
+    bandwidth: float,
+    reduce_speed: float,
+    t_fwd_per_sample: float,
+    t_bwd: float,
+    batch_size: float,
+    overhead: float = 0.0,
+) -> float:
+    """The w->inf upper bound: d(2/b + 1/G) + t_f M + t_b + gamma."""
+    return (
+        d * (2.0 / bandwidth + 1.0 / reduce_speed)
+        + t_fwd_per_sample * batch_size
+        + t_bwd
+        + overhead
+    )
+
+
+def ps_worker_bytes(d: float, w: int, elem_bytes: int = 4) -> float:
+    """PS-worker architecture per-iteration data exchange: 2wd (paper §III-2).
+
+    Kept as the scalability comparison baseline (RAR's motivating contrast).
+    """
+    return 2.0 * w * d * elem_bytes
+
+
+def effective_zeta(profile: RarJobProfile, w: int, slot_seconds: float) -> float:
+    """Per-worker-time efficiency used by the DDLJS objective.
+
+    The paper's excessive-training-avoidance instantiation: zeta_i is the
+    number of iterations per unit worker-time. We normalize per-slot so the
+    utility argument ``zeta_i * sum_t sum_s y_is[t]`` counts iterations
+    accumulated across the schedule.
+    """
+    if w <= 0:
+        return 0.0
+    return float(profile.iterations_per_slot(w, slot_seconds)) / float(w)
+
+
+def profile_from_arch(
+    *,
+    n_params: float,
+    tokens_per_batch: float,
+    chip_flops: float = 197e12,
+    chip_hbm_bw: float = 819e9,
+    link_bandwidth_bytes: float = 50e9,
+    grad_elem_bytes: int = 4,
+    overhead: float = 5e-3,
+) -> RarJobProfile:
+    """Derive an Eq.-(1) profile from a real architecture config.
+
+    Single source of truth with the dry-run/roofline (DESIGN.md §2):
+      - d          = n_params (gradient elements)
+      - b          = ICI/NIC link bandwidth in elements/sec
+      - G          = reduction throughput: HBM-bound 2-read-1-write streams
+      - t_f, t_b   = 2ND and 4ND FLOPs over chip peak (fwd:bwd = 1:2)
+    """
+    flops_fwd = 2.0 * n_params * tokens_per_batch
+    t_f_total = flops_fwd / chip_flops
+    t_f_per_sample = t_f_total / max(tokens_per_batch, 1.0)
+    t_b = 2.0 * flops_fwd / chip_flops
+    b_elems = link_bandwidth_bytes / grad_elem_bytes
+    g_elems = chip_hbm_bw / (3.0 * grad_elem_bytes)  # 2 reads + 1 write per add
+    return RarJobProfile(
+        d=float(n_params),
+        bandwidth=b_elems,
+        reduce_speed=g_elems,
+        t_fwd_per_sample=t_f_per_sample,
+        t_bwd=t_b,
+        batch_size=tokens_per_batch,
+        overhead=overhead,
+    )
+
+
+def optimal_worker_count(profile: RarJobProfile, w_max: int, slot_seconds: float = 1.0) -> int:
+    """Worker count maximizing total iterations/sec across the ring.
+
+    Eq. (1) throughput w/tau(w) is unimodal in w for fixed M; we just argmax
+    over the (small) feasible range — this is the per-job planning primitive
+    the scheduler exposes to users.
+    """
+    best_w, best_rate = 1, -math.inf
+    for w in range(1, max(1, w_max) + 1):
+        rate = w / float(profile.iteration_time(w))
+        if rate > best_rate:
+            best_w, best_rate = w, rate
+    return best_w

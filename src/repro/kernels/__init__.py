@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots of the scheduled jobs.
+
+The paper (a scheduler) has no kernel-level contribution of its own; these
+kernels belong to the *jobs* GADGET schedules — attention/SSD/WKV are where
+their FLOPs live (DESIGN.md §3, §7). Each kernel ships with a pure-jnp
+oracle in ``ref.py`` and is validated in interpret mode on CPU across
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+
+from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
+from repro.kernels.rwkv6_wkv import wkv6_pallas  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan_pallas  # noqa: F401
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,128 @@
+"""Pallas TPU flash attention (causal / sliding-window / GQA).
+
+TPU-native adaptation (DESIGN.md §3): online-softmax streaming over KV blocks
+with VMEM-resident (block_q, head_dim) accumulators — no S x S tensor ever
+leaves VMEM. Grid is (batch, q_heads, q_blocks, kv_blocks) with the kv axis
+innermost ("arbitrary" semantics) so m/l/acc scratch carries across kv steps.
+Block sizes default to MXU-aligned 128.
+
+Validated against ``repro.kernels.ref.mha_reference`` in interpret mode on
+CPU (tests sweep shapes & dtypes); intended for real TPUs via ops.flash_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, seq_kv: int,
+                  causal: bool, window: Optional[int], n_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (Bk, D)
+    s = q @ k.T                                          # (Bq, Bk)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,   # (B, Sq, Hq, D)
+    k: jax.Array,   # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, "GQA requires q_heads % kv_heads == 0"
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    # pad sequence dims to block multiples (masked out in-kernel)
+    pq = (-sq) % block_q
+    pk = (-skv) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = (sq + pq) // block_q
+    nk = (skv + pk) // block_k
+    # (B, H, S, D) layout for clean BlockSpecs
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / math.sqrt(d),
+        block_q=block_q, block_k=block_k, seq_kv=skv,
+        causal=causal, window=window, n_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, iq, ik: (b_, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, iq, ik: (b_, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq + pq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)[:, :sq]

@@ -1,0 +1,44 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they run in
+interpret mode, which executes the kernel body with numpy-level semantics —
+correctness-equivalent, used by the test suite. The model code defaults to
+the XLA chunked implementations (sharding-friendly under GSPMD); flip
+``use_pallas=True`` per-call or via config on real TPU runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_wkv import wkv6_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, logw, u, *, chunk: int = 32):
+    return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+These are written for clarity and exactness, not speed: dense attention,
+sequential SSD recurrence, sequential WKV recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: Optional[int] = None,
+) -> jax.Array:
+    """q: (B,Sq,Hq,D); k/v: (B,Skv,Hkv,D) with Hq % Hkv == 0."""
+    hq, hkv = q.shape[2], k.shape[2]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(
+    x: jax.Array,    # (B,S,H,P)
+    dt: jax.Array,   # (B,S,H)
+    A: jax.Array,    # (H,)
+    Bm: jax.Array,   # (B,S,N)
+    Cm: jax.Array,   # (B,S,N)
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential Mamba2 SSD recurrence (exact oracle).
+
+    state_t = exp(A dt_t) state_{t-1} + B_t (x) (dt_t x_t)
+    y_t     = C_t . state_t
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    xf = (x * dt[..., None]).astype(jnp.float32)
+    dec = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,S,H)
+    state = (jnp.zeros((b, h, n, p), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+
+    def step(state, t):
+        state = state * dec[:, t][..., None, None] + jnp.einsum(
+            "bn,bhp->bhnp", Bm[:, t].astype(jnp.float32), xf[:, t])
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, t].astype(jnp.float32), state)
+        return state, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), state  # (B,S,H,P)
+
+
+def wkv6_reference(
+    r: jax.Array,     # (B,S,H,P)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # (B,S,H,P), negative
+    u: jax.Array,     # (H,P)
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential RWKV6 recurrence (exact oracle).
+
+    y_t     = r_t . (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    b, s, h, p = r.shape
+    state = (jnp.zeros((b, h, p, p), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, t):
+        kv = jnp.einsum("bhp,bhq->bhpq", kf[:, t], vf[:, t])
+        y = jnp.einsum("bhp,bhpq->bhq", rf[:, t], state + uf[..., None] * kv)
+        state = state * w[:, t][..., None] + kv
+        return state, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the RWKV6 chunked WKV recurrence.
+
+Grid (batch, heads, chunks), chunk axis innermost; the (P, P) state matrix
+lives in VMEM scratch. Intra-chunk uses the rebased log-space factorization
+(per-step log-decay clamped by the model definition, see
+``repro.models.rwkv.DECAY_CLAMP``) — identical semantics to
+``repro.models.rwkv.wkv6_chunked`` and the sequential oracle
+``repro.kernels.ref.wkv6_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_scr, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)     # (L, P)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)   # (L, P), negative
+    u = u_ref[0].astype(jnp.float32)        # (P,)
+
+    cum = jnp.cumsum(lw, axis=0)            # (L, P) <= 0
+    cumprev = cum - lw
+    r_dec = r * jnp.exp(cumprev)
+    k_boost = k * jnp.exp(-cum)
+    a = r_dec @ k_boost.T                   # (L, L)
+    tri = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)  # strictly j < t
+    a = jnp.where(tri, a, 0.0)
+    y = a @ v
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)  # (L,)
+    y += bonus[:, None] * v
+
+    state = state_scr[...]                  # (P, P)
+    y += r_dec @ state
+
+    k_tail = k * jnp.exp(cum[-1] - cum)     # (L, P)
+    state_scr[...] = state * jnp.exp(cum[-1])[:, None] + k_tail.T @ v
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+
+def wkv6_pallas(
+    r: jax.Array,     # (B, S, H, P)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # (B, S, H, P), negative (clamped per model definition)
+    u: jax.Array,     # (H, P)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = r.shape
+    lc = min(chunk, s)
+    pad = (-s) % lc
+    if pad:
+        r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // lc
+    rt, kt, vt, lwt = (a.transpose(0, 2, 1, 3) for a in (r, k, v, logw))
+
+    out = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=lc),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, lc, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, lc, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, lc, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, lc, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, p), lambda b_, h_, c: (h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, lc, p), lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, p), r.dtype),
+        scratch_shapes=[pltpu.VMEM((p, p), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(rt, kt, vt, lwt, u)
+    return out.transpose(0, 2, 1, 3)[:, :s]

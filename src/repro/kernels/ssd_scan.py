@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid (batch, heads, chunks) with the chunk axis innermost ("arbitrary"
+semantics): the (N, P) recurrent state lives in VMEM scratch and carries
+across chunk steps — the inter-chunk recurrence never touches HBM. Per chunk
+the kernel computes the intra-chunk decay-masked attention-like term plus the
+state readout, exactly the algorithm of ``repro.models.ssm.ssd_chunked``;
+the sequential oracle is ``repro.kernels.ref.ssd_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L,)
+    a_coef = a_ref[0].astype(jnp.float32)        # scalar decay rate (negative)
+    bm = b_ref[0].astype(jnp.float32)            # (L, N)
+    cm = c_ref[0].astype(jnp.float32)            # (L, N)
+
+    xf = x * dt[:, None]
+    a = dt * a_coef                              # (L,) negative increments
+    g = jnp.cumsum(a)                            # (L,)
+    diff = g[:, None] - g[None, :]               # (L, L): t row, j col; <=0 valid
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    cb = cm @ bm.T                               # (L, L)
+    y = (cb * decay) @ xf                        # intra-chunk
+
+    state = state_scr[...]                       # (N, P)
+    y += (cm * jnp.exp(g)[:, None]) @ state      # inter-chunk readout
+
+    wlast = jnp.exp(g[-1] - g)                   # (L,)
+    state_scr[...] = state * jnp.exp(g[-1]) + (bm * wlast[:, None]).T @ xf
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)
+    A: jax.Array,    # (H,)
+    Bm: jax.Array,   # (B, S, N)
+    Cm: jax.Array,   # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    lc = min(chunk, s)
+    pad = (-s) % lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // lc
+    xt = x.transpose(0, 2, 1, 3)     # (B, H, S, P)
+    dtt = dt.transpose(0, 2, 1)      # (B, H, S)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=lc),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, lc, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, lc), lambda b_, h_, c: (b_, h_, c)),
+            pl.BlockSpec((1,), lambda b_, h_, c: (h_,)),
+            pl.BlockSpec((1, lc, n), lambda b_, h_, c: (b_, c, 0)),
+            pl.BlockSpec((1, lc, n), lambda b_, h_, c: (b_, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, lc, p), lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(xt, dtt, A, Bm, Cm)
+    return out.transpose(0, 2, 1, 3)[:, :s]

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the two
+lines above execute before any other import — jax locks the device count on
+first init, and only the dry-run should see 512 placeholder devices.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — proves the sharded program fits
+  * compiled.cost_analysis()    — per-device HLO FLOPs/bytes for §Roofline
+  * parsed collective wire bytes (hlo_analysis) — the third roofline term
+
+Results land in results/dryrun/<mesh>/<arch>__<shape>.json and feed
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import ShardingRules, activate, make_rules, param_shardings
+from repro.launch.hlo_analysis import (
+    HBM_BW,
+    HloCostModel,
+    Roofline,
+    model_flops_for,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.models.module import ParamSpec, _flatten, _unflatten, abstract_from_specs
+from repro.training.optimizer import make_optimizer
+from repro.training.train_step import make_train_step
+
+
+def active_params(cfg: ArchConfig) -> float:
+    """Active (per-token) parameter count: MoE experts scaled by top_k/E."""
+    model = build_model(cfg)
+    specs = model.param_specs()
+    total_active = 0.0
+    for path, s in _flatten(specs):
+        n = float(np.prod(s.shape))
+        if cfg.n_experts and "/we_" in f"/{path}":
+            n *= cfg.top_k / cfg.n_experts
+        total_active += n
+    return total_active
+
+
+def total_params(cfg: ArchConfig) -> float:
+    model = build_model(cfg)
+    return float(sum(np.prod(s.shape) for _, s in _flatten(model.param_specs())))
+
+
+def _batch_spec(rules: ShardingRules, divisible: bool) -> P:
+    return rules.spec_for(("batch", None)) if divisible else P()
+
+
+def adafactor_spec_tree(param_specs):
+    """ParamSpec tree for adafactor stats (factored axes follow the param)."""
+    def leaf(spec: ParamSpec):
+        if len(spec.shape) >= 2:
+            return {
+                "vr": ParamSpec(spec.shape[:-1], spec.axes[:-1],
+                                dtype=jnp.float32, init="zeros"),
+                "vc": ParamSpec(spec.shape[:-2] + spec.shape[-1:],
+                                spec.axes[:-2] + spec.axes[-1:],
+                                dtype=jnp.float32, init="zeros"),
+            }
+        return {"v": ParamSpec(spec.shape, spec.axes, dtype=jnp.float32,
+                               init="zeros")}
+
+    flat = {p: leaf(s) for p, s in _flatten(param_specs)}
+    return _unflatten(flat)
+
+
+def opt_state_shardings(opt_name: str, rules: ShardingRules, param_specs,
+                        mesh) -> Dict:
+    psh = param_shardings(rules, param_specs)
+    repl = NamedSharding(mesh, P())
+    if opt_name == "adamw":
+        return {"m": psh, "v": psh, "step": repl}
+    if opt_name == "adafactor":
+        stats_specs = adafactor_spec_tree(param_specs)
+        return {"stats": param_shardings(rules, stats_specs), "step": repl}
+    if opt_name == "sgdm":
+        return {"mom": psh, "step": repl}
+    raise ValueError(opt_name)
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               fsdp: Optional[bool] = None,
+               sequence_parallel: Optional[bool] = None,
+               remat: Optional[bool] = None,
+               pure_dp: Optional[bool] = None,
+               cache_seq_shard: Optional[bool] = None,
+               moe_tp: Optional[bool] = None):
+    """Returns (lowered_fn_args) ready to lower: (fn, args, shardings_meta)."""
+    cfg = get_arch(arch)
+    if fsdp is not None:
+        cfg = dataclasses.replace(cfg, fsdp=fsdp)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    data_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                             if a in ("pod", "data")]))
+    sp = (cfg.sequence_parallel or shape.kind == "prefill"
+          if sequence_parallel is None else sequence_parallel)
+    rules = make_rules(mesh, fsdp=cfg.fsdp, sequence_parallel=sp,
+                       pure_dp=bool(pure_dp), moe_tp=bool(moe_tp))
+    model = build_model(cfg)
+    specs = model.param_specs()
+    params_abs = abstract_from_specs(specs, dtype=jnp.bfloat16)
+    psh = param_shardings(rules, specs)
+    divisible = shape.global_batch % data_size == 0
+
+    if shape.kind == "train":
+        optimizer = make_optimizer(cfg.optimizer)
+        opt_abs = jax.eval_shape(optimizer.init, params_abs)
+        osh = opt_state_shardings(cfg.optimizer, rules, specs, mesh)
+        step_fn = make_train_step(model, optimizer, lr=1e-4)
+        inputs = model.input_specs(shape)
+        bspec = _batch_spec(rules, divisible)
+        in_shardings = (psh, osh,
+                        jax.tree.map(lambda _: NamedSharding(mesh, bspec),
+                                     inputs))
+        out_shardings = (psh, osh, None)
+
+        def fn(params, opt_state, batch):
+            with activate(rules):
+                return step_fn(params, opt_state, batch)
+
+        args = (params_abs, opt_abs, inputs)
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings,
+                         donate_argnums=(0, 1))
+    elif shape.kind == "prefill":
+        inputs = model.input_specs(shape)
+        bspec = _batch_spec(rules, divisible)
+
+        def fn(params, batch):
+            with activate(rules):
+                logits, _ = model.forward(params, batch)
+                return logits
+
+        args = (params_abs, inputs)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(psh, jax.tree.map(
+                lambda _: NamedSharding(mesh, bspec), inputs)),
+        )
+    else:  # decode
+        b = shape.global_batch
+        cache_specs = model.cache_specs(b, shape.seq_len)
+        # long-context single-sample decode: shard the cache seq dim over the
+        # idle data axis instead of the (unshardable) batch dim
+        if not divisible:
+            rules.rules["batch"] = None
+            rules.rules["seq"] = tuple(
+                a for a in ("data",) if a in mesh.axis_names)
+        # kv_heads that don't divide the model axis leave the cache
+        # replicated 16-way; shard its seq dim over "model" instead
+        # (perf iteration: 15x decode memory on phi3-medium; default ON
+        # whenever kv_heads %% model != 0)
+        if cache_seq_shard is None:
+            cache_seq_shard = (cfg.n_kv_heads % mesh.shape.get("model", 1)
+                               != 0 and cfg.family not in ("ssm", "rwkv"))
+        if cache_seq_shard:
+            rules.rules["seq"] = "model"
+        cache_abs = abstract_from_specs(cache_specs)
+        csh = param_shardings(rules, cache_specs)
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        bspec = _batch_spec(rules, divisible)
+
+        def fn(params, cache, tokens):
+            with activate(rules):
+                logits, new_cache = model.decode_step(
+                    params, cache, tokens, jnp.int32(shape.seq_len - 1))
+                return logits, new_cache
+
+        args = (params_abs, cache_abs, tokens)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(psh, csh, NamedSharding(mesh, bspec)),
+            donate_argnums=(1,),
+        )
+    return jitted, args, mesh, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "results/dryrun", verbose: bool = True,
+             **overrides) -> Dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    jitted, args, mesh, cfg, shape = build_cell(
+        arch, shape_name, multi_pod=multi_pod, **overrides)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    model_axis = mesh.shape.get("model", 1)
+    # while-expanding HLO cost model: XLA's cost_analysis counts scan bodies
+    # once (undercounting scanned-layer models ~n_layers-fold) — see
+    # hlo_analysis.HloCostModel and tests/test_hlo_analysis.py.
+    hcm = HloCostModel(hlo, default_group=model_axis)
+    hc = hcm.entry_cost()
+    # intermediates the Pallas flash kernel keeps in VMEM (named_scope-tagged)
+    flash_bytes = hcm.scope_bytes("flash_attention")
+
+    n_active = active_params(cfg)
+    n_total = total_params(cfg)
+    rf = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        n_devices=mesh.devices.size,
+        flops_per_device=hc.flops,
+        bytes_per_device=hc.bytes,
+        collective_wire_bytes=hc.total_wire_bytes,
+        peak_memory_bytes=getattr(mem, "temp_size_in_bytes", None),
+        model_flops=model_flops_for(cfg, shape, n_active, n_total),
+    )
+    record = rf.to_dict()
+    record.update({
+        "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes},
+        "flash_scope_bytes": flash_bytes,
+        "memory_s_kernel_adjusted": max(hc.bytes - flash_bytes, 0.0) / HBM_BW,
+        "unresolved_whiles": hc.unresolved_whiles,
+        "collective_counts": hc.coll_counts,
+        "collective_payload_bytes": hc.coll_payload,
+        "collective_wire_by_op": hc.coll_wire,
+        "memory": {
+            k: float(getattr(mem, k))
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "n_params_total": n_total,
+        "n_params_active": n_active,
+        "overrides": {k: v for k, v in overrides.items() if v is not None},
+    })
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    suffix = ""
+    if any(v is not None for v in overrides.values()):
+        suffix = "__" + "_".join(f"{k}={v}" for k, v in sorted(overrides.items())
+                                 if v is not None)
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        print(f"[dryrun] {mesh_name} {arch} {shape_name}{suffix}: "
+              f"compile={t_compile:.1f}s flops/dev={hc.flops:.3e} "
+              f"bytes/dev={hc.bytes:.3e} wire={hc.total_wire_bytes:.3e} "
+              f"bottleneck={record['bottleneck']} "
+              f"roofline={record['roofline_fraction']:.3f} "
+              f"useful={record['useful_flops_fraction']:.3f}", flush=True)
+        print(f"  memory_analysis: {record['memory']}", flush=True)
+        print(f"  xla cost_analysis (scan bodies once): flops={xla_flops:.4e} "
+              f"bytes={xla_bytes:.4e}", flush=True)
+    return record
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--arch", default=None, choices=list_archs() + [None])
+    parser.add_argument("--shape", default=None,
+                        choices=list(SHAPES) + [None])
+    parser.add_argument("--multi-pod", action="store_true")
+    parser.add_argument("--all", action="store_true",
+                        help="run every supported (arch x shape) cell")
+    parser.add_argument("--resume", action="store_true",
+                        help="skip cells whose JSON already exists")
+    parser.add_argument("--out", default="results/dryrun")
+    parser.add_argument("--fsdp", default=None, type=lambda s: s == "1")
+    parser.add_argument("--pure-dp", dest="pure_dp", default=None,
+                        type=lambda s: s == "1")
+    parser.add_argument("--cache-seq-shard", dest="cache_seq_shard",
+                        default=None, type=lambda s: s == "1")
+    parser.add_argument("--moe-tp", dest="moe_tp", default=None,
+                        type=lambda s: s == "1")
+    parser.add_argument("--sp", dest="sequence_parallel", default=None,
+                        type=lambda s: s == "1")
+    parser.add_argument("--remat", default=None, type=lambda s: s == "1")
+    args = parser.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in get_arch(arch).supported_shapes():
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    failures = []
+    for arch, shape in cells:
+        path = os.path.join(args.out, mesh_name, f"{arch}__{shape}.json")
+        if args.resume and os.path.exists(path):
+            print(f"[dryrun] skip {arch} {shape} (exists)", flush=True)
+            continue
+        try:
+            run_cell(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
+                     fsdp=args.fsdp,
+                     sequence_parallel=args.sequence_parallel,
+                     remat=args.remat, pure_dp=args.pure_dp,
+                     cache_seq_shard=args.cache_seq_shard,
+                     moe_tp=args.moe_tp)
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            failures.append((arch, shape, repr(e)))
+            print(f"[dryrun] FAIL {arch} {shape}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}", flush=True)
+        raise SystemExit(1)
+    print("[dryrun] all cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,542 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+``cost_analysis()`` gives per-device HLO FLOPs / bytes; collective traffic is
+NOT in cost_analysis, so we parse the partitioned HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, converting payloads to per-device *wire bytes* with ring
+formulas (group size parsed from replica_groups).
+
+Hardware constants (TPU v5e): 197 TF bf16/chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (per direction)
+DCN_BW = 6.25e9              # bytes/s per chip across pods (~50 Gb/s NIC share)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[total]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    payload_bytes: Dict[str, float]    # per-device result-shape bytes summed
+    wire_bytes: Dict[str, float]       # per-device bytes-on-wire (ring model)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+# ---------------------------------------------------------------------------
+# While-expanding HLO cost model
+#
+# XLA's compiled.cost_analysis() counts a while (lax.scan) body ONCE,
+# regardless of trip count — measured in tests/test_hlo_analysis.py. For
+# scanned-layer models that undercounts FLOPs by ~n_layers. We therefore walk
+# the partitioned HLO text ourselves: per-computation dot FLOPs, byte-traffic
+# estimates, and collective wire bytes, recursively multiplying while bodies
+# by trip counts parsed from their condition computations (`constant(K)` +
+# LT compare — the stable XLA lowering of lax.scan).
+# ---------------------------------------------------------------------------
+
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([\w\-]+)\((.*)$")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_CFG_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"")
+_CALLED_RE = re.compile(r"(?:condition|body|calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+    is_entry: bool = False
+
+
+def _parse_op(line: str) -> Optional[_Op]:
+    m = _OP_HEAD_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2).strip()
+    if rest.startswith("("):
+        # tuple type (may contain /*index=N*/ comments): match parens
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        type_str, tail = rest[:end + 1], rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp + 1:].lstrip()
+    m2 = _OPCODE_RE.match(tail)
+    if not m2:
+        return None
+    return _Op(name, type_str, m2.group(1), m2.group(2))
+
+
+def _parse_computations(hlo_text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    current: Optional[_Computation] = None
+    for line in hlo_text.splitlines():
+        head = _COMP_HEAD_RE.match(line.strip())
+        if head and (line.startswith("%") or line.startswith("ENTRY")):
+            current = _Computation(head.group(1), [],
+                                   is_entry=line.startswith("ENTRY"))
+            comps[current.name] = current
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        op = _parse_op(line)
+        if op:
+            current.ops.append(op)
+    return comps
+
+
+def _shape_dims(type_str: str):
+    """First shape in a type string -> (dtype, dims list)."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_payload: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_wire: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    unresolved_whiles: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for c in _COLLECTIVES:
+            self.coll_counts[c] += mult * other.coll_counts[c]
+            self.coll_payload[c] += mult * other.coll_payload[c]
+            self.coll_wire[c] += mult * other.coll_wire[c]
+        self.unresolved_whiles += other.unresolved_whiles
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.coll_wire.values())
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, default_group: int):
+        self.comps = _parse_computations(hlo_text)
+        self.default_group = default_group
+        self._types: Dict[Tuple[str, str], str] = {}
+        for comp in self.comps.values():
+            for op in comp.ops:
+                self._types[(comp.name, op.name)] = op.type_str
+        self._memo: Dict[str, HloCost] = {}
+
+    # -- helpers -------------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> Optional[int]:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return None
+        consts = []
+        for op in comp.ops:
+            consts += [int(x) for x in _CONST_RE.findall(
+                f"{op.type_str} {op.opcode}({op.rest}")]
+            # constants also appear as "%c = s32[] constant(28)" ops
+            if op.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", f"{op.opcode}({op.rest}")
+                if m and "[]" in op.type_str:
+                    consts.append(int(m.group(1)))
+        return max(consts) if consts else None
+
+    def _operand_names(self, rest: str):
+        # operands before the first "), " attr separator
+        args = rest.split(")")[0]
+        return re.findall(r"%([\w.\-]+)", args)
+
+    def _dot_flops(self, comp: str, op: _Op) -> float:
+        _, out_dims = _shape_dims(op.type_str)
+        out_elems = float(np.prod(out_dims)) if out_dims else 1.0
+        operands = self._operand_names(op.rest)
+        contract = 1.0
+        m = _CONTRACT_RE.search(op.rest)
+        if operands and m is not None:
+            lhs_type = self._types.get((comp, operands[0]), "")
+            _, lhs_dims = _shape_dims(lhs_type)
+            idxs = [int(x) for x in m.group(1).split(",") if x != ""]
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+        return 2.0 * out_elems * contract
+
+    # opcode classes for the HBM-traffic estimate. The CPU-backend HLO is
+    # less fused than TPU's; to estimate *TPU* traffic we count only ops that
+    # must touch HBM on TPU: matmul operands/outputs, fusion outputs, data
+    # movement (copy/concat/slice/dus/gather/scatter/reduce), and collective
+    # payloads. Top-level elementwise chains are assumed fused (skipped).
+    _BYTES_FULL = ("dot", "convolution")            # operands + output
+    _BYTES_OUT = ("fusion", "copy", "concatenate", "slice", "dynamic-slice",
+                  "dynamic-update-slice", "gather", "scatter", "reduce",
+                  "reduce-window", "transpose", "reverse", "pad", "sort")
+
+    def _op_bytes(self, comp: str, op: _Op) -> float:
+        if op.opcode in self._BYTES_FULL:
+            out = _shape_bytes(op.type_str)
+            for name in self._operand_names(op.rest):
+                out += _shape_bytes(self._types.get((comp, name), ""))
+            return float(out)
+        if op.opcode in self._BYTES_OUT:
+            return float(_shape_bytes(op.type_str))
+        return 0.0
+
+    # -- recursion -----------------------------------------------------------
+    def cost_of(self, comp_name: str) -> HloCost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        cost = HloCost()
+        self._memo[comp_name] = cost  # guards recursion
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return cost
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = cond = None
+                for mm in re.finditer(r"(condition|body)=%?([\w.\-]+)",
+                                      op.rest):
+                    if mm.group(1) == "condition":
+                        cond = mm.group(2)
+                    else:
+                        body = mm.group(2)
+                # preferred: XLA's own known_trip_count backend_config
+                trip = None
+                mtc = _TRIP_CFG_RE.search(op.rest)
+                if mtc:
+                    trip = int(mtc.group(1))
+                if trip is None and cond:
+                    trip = self._trip_count(cond)
+                if trip is None:
+                    trip = 1
+                    cost.unresolved_whiles += 1
+                if body:
+                    cost.add(self.cost_of(body), mult=float(trip))
+                continue
+            if op.opcode == "conditional":
+                branches = _BRANCHES_RE.search(op.rest)
+                names = []
+                if branches:
+                    names = re.findall(r"%?([\w.\-]+)", branches.group(1))
+                else:
+                    names = _CALLED_RE.findall(op.rest)
+                if names:
+                    sub = [self.cost_of(n) for n in names]
+                    worst = max(sub, key=lambda c: c.flops)
+                    cost.add(worst)
+                continue
+            if op.opcode in ("call", "fusion", "custom-call"):
+                for name in _CALLED_RE.findall(op.rest):
+                    cost.add(self.cost_of(name))
+                if op.opcode == "fusion":
+                    cost.bytes += self._op_bytes(comp.name, op)
+                continue
+            if op.opcode == "dot":
+                cost.flops += self._dot_flops(comp.name, op)
+                cost.bytes += self._op_bytes(comp.name, op)
+                continue
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                nbytes = _shape_bytes(op.type_str)
+                g = _group_size(op.rest, self.default_group)
+                cost.coll_counts[base] += 1
+                cost.coll_payload[base] += nbytes
+                if base == "all-reduce":
+                    cost.coll_wire[base] += 2.0 * nbytes * (g - 1) / max(g, 1)
+                elif base == "all-gather":
+                    cost.coll_wire[base] += nbytes * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    cost.coll_wire[base] += nbytes * (g - 1)
+                elif base == "all-to-all":
+                    cost.coll_wire[base] += nbytes * (g - 1) / max(g, 1)
+                else:
+                    cost.coll_wire[base] += nbytes
+                continue
+            cost.bytes += self._op_bytes(comp.name, op)
+        return cost
+
+    def _comp_multiplicity(self) -> Dict[str, float]:
+        """Effective execution count of each computation from ENTRY, with
+        while bodies multiplied by trip counts (for per-op attribution)."""
+        mult: Dict[str, float] = {}
+        entry = next((n for n, c in self.comps.items() if c.is_entry), None)
+        if entry is None:
+            return mult
+
+        def visit(name: str, m: float):
+            if m <= 0 or name not in self.comps:
+                return
+            mult[name] = mult.get(name, 0.0) + m
+            for op in self.comps[name].ops:
+                if op.opcode == "while":
+                    trip = 1
+                    mtc = _TRIP_CFG_RE.search(op.rest)
+                    if mtc:
+                        trip = int(mtc.group(1))
+                    for mm in re.finditer(r"body=%?([\w.\-]+)", op.rest):
+                        visit(mm.group(1), m * trip)
+                elif op.opcode in ("call", "fusion", "custom-call",
+                                   "conditional"):
+                    for sub in _CALLED_RE.findall(op.rest):
+                        visit(sub, m)
+
+        visit(entry, 1.0)
+        return mult
+
+    def _op_wire(self, op: _Op) -> float:
+        base = op.opcode.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES or op.opcode.endswith("-done"):
+            return 0.0
+        nbytes = _shape_bytes(op.type_str)
+        g = _group_size(op.rest, self.default_group)
+        if base == "all-reduce":
+            return 2.0 * nbytes * (g - 1) / max(g, 1)
+        if base == "reduce-scatter":
+            return nbytes * (g - 1)
+        if base == "collective-permute":
+            return float(nbytes)
+        return nbytes * (g - 1) / max(g, 1)
+
+    def top_ops(self, k: int = 15, metric: str = "bytes"):
+        """Largest byte / flop / collective-wire contributors with jax
+        op_name metadata — the profile used by the §Perf hypothesis loop."""
+        mult = self._comp_multiplicity()
+        rows = []
+        for cname, m in mult.items():
+            for op in self.comps[cname].ops:
+                if metric == "flops":
+                    val = self._dot_flops(cname, op) if op.opcode == "dot" else 0.0
+                elif metric == "wire":
+                    val = self._op_wire(op)
+                else:
+                    val = self._op_bytes(cname, op)
+                if val <= 0:
+                    continue
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                rows.append({
+                    "total": val * m,
+                    "per_exec": val,
+                    "mult": m,
+                    "opcode": op.opcode,
+                    "type": op.type_str[:60],
+                    "op_name": meta.group(1)[-90:] if meta else "",
+                })
+        rows.sort(key=lambda r: -r["total"])
+        return rows[:k]
+
+    def scope_bytes(self, scope: str) -> float:
+        """Mult-weighted HBM bytes of ops whose op_name contains ``scope``
+        (e.g. "flash_attention") — intermediates a Pallas kernel would keep
+        in VMEM; feeds the kernel-adjusted memory term."""
+        mult = self._comp_multiplicity()
+        total = 0.0
+        for cname, m in mult.items():
+            for op in self.comps[cname].ops:
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                if meta and scope in meta.group(1):
+                    total += m * self._op_bytes(cname, op)
+        return total
+
+    def entry_cost(self) -> HloCost:
+        for name, comp in self.comps.items():
+            if comp.is_entry:
+                return self.cost_of(name)
+        # fallback: largest computation
+        total = HloCost()
+        if self.comps:
+            total.add(self.cost_of(max(
+                self.comps, key=lambda n: len(self.comps[n].ops))))
+        return total
+
+
+def analyze_hlo(hlo_text: str, default_group: int) -> HloCost:
+    return HloCostModel(hlo_text, default_group).entry_cost()
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    payload: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    wire: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match "op-name(" or "op-name-start(" occurrences with a result type
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # count start ops only (async pairs)
+        nbytes = _shape_bytes(result_type)
+        if nbytes == 0:
+            continue
+        g = _group_size(line, default_group)
+        counts[op] += 1
+        payload[op] += nbytes
+        # per-device wire bytes under ring algorithms:
+        if op == "all-reduce":
+            wire[op] += 2.0 * nbytes * (g - 1) / max(g, 1)
+        elif op == "all-gather":
+            # result is the gathered (full) tensor; each device receives
+            # (g-1)/g of it and sends its 1/g shard (g-1) times
+            wire[op] += nbytes * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            # result is the scattered shard; input was g x larger
+            wire[op] += nbytes * (g - 1)
+        elif op == "all-to-all":
+            wire[op] += nbytes * (g - 1) / max(g, 1)
+        else:  # collective-permute: one hop
+            wire[op] += nbytes
+    return CollectiveStats(counts=counts, payload_bytes=payload,
+                           wire_bytes=wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_wire_bytes: float
+    peak_memory_bytes: Optional[float]
+    model_flops: float                 # 6*N*D analytical (or fwd-only variants)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_wire_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        total_hlo = self.flops_per_device * self.n_devices
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak the dominant-term-bound step achieves on useful
+        FLOPs: (model_flops / chips / peak) / max(term)."""
+        ideal_s = self.model_flops / self.n_devices / PEAK_FLOPS
+        worst = max(self.compute_s, self.memory_s, self.collective_s)
+        return ideal_s / worst if worst else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(arch_cfg, shape_cfg, n_params_active: float,
+                    n_params_total: float) -> float:
+    """Analytical MODEL_FLOPS: 6*N*D train, 2*N*D forward-only per token."""
+    tokens = shape_cfg.global_batch * (
+        shape_cfg.seq_len if shape_cfg.kind in ("train", "prefill") else 1)
+    n = n_params_active
+    if shape_cfg.kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens

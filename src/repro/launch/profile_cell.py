@@ -1,0 +1,41 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-op profile of one dry-run cell: the §Perf 'profiler' (run standalone).
+
+Usage: PYTHONPATH=src python -m repro.launch.profile_cell \\
+           --arch granite-3-2b --shape train_4k [--metric bytes|flops] [--multi-pod]
+"""
+
+import argparse
+
+from repro.configs import SHAPES, list_archs
+from repro.launch.dryrun import build_cell
+from repro.launch.hlo_analysis import HloCostModel
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True, choices=list_archs())
+    p.add_argument("--shape", required=True, choices=list(SHAPES))
+    p.add_argument("--metric", default="bytes", choices=["bytes", "flops", "wire"])
+    p.add_argument("--top", type=int, default=15)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--fsdp", default=None, type=lambda s: s == "1")
+    args = p.parse_args()
+
+    jitted, cell_args, mesh, cfg, shape = build_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod, fsdp=args.fsdp)
+    hlo = jitted.lower(*cell_args).compile().as_text()
+    model = HloCostModel(hlo, default_group=mesh.shape.get("model", 1))
+    total = model.entry_cost()
+    val = {"bytes": total.bytes, "flops": total.flops,
+           "wire": total.total_wire_bytes}[args.metric]
+    print(f"total {args.metric}: {val:.3e}")
+    for r in model.top_ops(args.top, metric=args.metric):
+        print(f"  {r['total']:<10.3e} x{r['mult']:<6.0f} {r['opcode']:<22s} "
+              f"{r['type']:<52s} {r['op_name']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: the architectures GADGET schedules (and the dry-run targets)."""
+
+from repro.models.module import (  # noqa: F401
+    ParamSpec,
+    abstract_from_specs,
+    init_from_specs,
+    spec_tree_axes,
+)

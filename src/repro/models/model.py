@@ -1,0 +1,112 @@
+"""Model protocol + dispatcher.
+
+Every family implements:
+
+  param_specs()                       -> SpecTree (shapes/dtypes/logical axes)
+  init(key)                           -> params
+  forward(params, batch)              -> logits (B, S, V) [+ aux dict]
+  loss(params, batch)                 -> scalar (next-token CE + aux)
+  cache_specs(batch, max_seq)         -> SpecTree for the decode cache
+  decode_step(params, cache, tokens, cur_index) -> (logits, cache)
+  input_specs(shape)                  -> dict of ShapeDtypeStruct (dry-run)
+
+Params/caches are plain nested dicts; logical sharding axes live in the spec
+trees and are resolved to mesh axes by ``repro.dist.sharding``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.module import ParamSpec, SpecTree, abstract_from_specs, init_from_specs
+
+
+class BaseModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- to be provided by families -----------------------------------------
+    def param_specs(self) -> SpecTree:
+        raise NotImplementedError
+
+    def forward(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    def cache_specs(self, batch_size: int, max_seq: int) -> SpecTree:
+        raise NotImplementedError
+
+    def decode_step(self, params, cache, tokens, cur_index):
+        raise NotImplementedError
+
+    # -- shared --------------------------------------------------------------
+    def init(self, key: jax.Array, dtype=None):
+        return init_from_specs(self.param_specs(), key, dtype=dtype)
+
+    def abstract_params(self, dtype=None):
+        return abstract_from_specs(self.param_specs(), dtype=dtype)
+
+    def abstract_cache(self, batch_size: int, max_seq: int):
+        return abstract_from_specs(self.cache_specs(batch_size, max_seq))
+
+    def loss(self, params, batch) -> jax.Array:
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + 0.01 * aux.get("moe_aux", 0.0)
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind in ("train", "prefill"):
+            out = {"tokens": tok}
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            out.update(self.extra_input_specs(b))
+            return out
+        # decode: one new token against a max_seq cache
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    def extra_input_specs(self, batch_size: int) -> Dict[str, Any]:
+        """Modality-frontend stub inputs (patch/frame embeddings)."""
+        return {}
+
+
+def masked_lm_head(h, w, vocab: int):
+    """Logits over the padded vocab with pad slots masked to -inf (exact CE
+    under Megatron-style vocab padding)."""
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    vp = w.shape[-1]
+    if vp == vocab:
+        return logits
+    mask = jnp.arange(vp) < vocab
+    return jnp.where(mask[None, None, :], logits, jnp.float32(-1e30).astype(logits.dtype))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy; labels are pre-shifted by the pipeline."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def build_model(cfg: ArchConfig) -> BaseModel:
+    from repro.models import encdec, moe_model, rwkv, ssm, transformer
+
+    if cfg.family in ("dense", "vlm"):
+        return transformer.DenseLM(cfg)
+    if cfg.family == "moe":
+        return moe_model.MoeLM(cfg)
+    if cfg.family == "hybrid":
+        return ssm.Zamba2LM(cfg)
+    if cfg.family == "ssm":
+        return ssm.Mamba2LM(cfg)
+    if cfg.family == "rwkv":
+        return rwkv.Rwkv6LM(cfg)
+    if cfg.family == "encdec":
+        return encdec.WhisperLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,239 @@
+"""RWKV6 ("Finch"): attention-free LM with data-dependent per-channel decay.
+
+Time-mix uses the chunked WKV algorithm: intra-chunk pairwise decay products
+(computed in a rebased log-space factorization) + inter-chunk (P x P) state
+recurrence. The per-step log-decay is bounded at -DECAY_CLAMP *as part of the
+model definition* (bounded forgetting rate — keeps the rebased factorization
+in f32 range and is standard practice for trainable linear attention). The
+sequential oracle in ``repro.kernels.ref.wkv6_reference`` uses the identical
+semantics; both are tested to agree.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.model import BaseModel, masked_lm_head
+from repro.models.module import ParamSpec
+
+DECAY_CLAMP = 2.5   # per-step |log w| bound
+WKV_CHUNK = 32      # keeps exp(chunk * clamp) = e^80 inside f32 range
+LORA_RANK = 64
+
+
+def wkv6_chunked(
+    r: jax.Array,   # (B,S,H,P)
+    k: jax.Array,   # (B,S,H,P)
+    v: jax.Array,   # (B,S,H,P)
+    logw: jax.Array,  # (B,S,H,P)  negative, clamped to >= -DECAY_CLAMP
+    u: jax.Array,   # (H,P) bonus for the current token
+    initial_state: jax.Array | None = None,  # (B,H,P,P) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """y_t = r_t . (S_t + diag(u) k_t v_t^T);  S_{t+1} = diag(w_t) S_t + k_t v_t^T."""
+    b, s, h, p = r.shape
+    lc = min(WKV_CHUNK, s)
+    if s % lc:
+        pad = lc - s % lc
+        r, k, v, logw = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                         for a in (r, k, v, logw))
+    sp = r.shape[1]
+    nc = sp // lc
+    rf, kf, vf, lw = (a.astype(jnp.float32).reshape(b, nc, lc, h, p)
+                      for a in (r, k, v, logw))
+    cum = jnp.cumsum(lw, axis=2)              # (B,nc,L,H,P), <= 0
+    cumprev = cum - lw                        # cum_{t-1}
+    r_dec = rf * jnp.exp(cumprev)             # exp(<=0), safe
+    k_boost = kf * jnp.exp(-cum)              # bounded by e^{L*clamp}
+    a = jnp.einsum("bclhp,bcmhp->bchlm", r_dec, k_boost)   # (B,nc,H,L,L)
+    mask = jnp.tril(jnp.ones((lc, lc), bool), k=-1)        # strictly j < t
+    a = jnp.where(mask[None, None, None], a, 0.0)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", a, vf)
+    bonus = jnp.einsum("bclhp,hp,bclhp->bclh", rf, u.astype(jnp.float32), kf)
+    y_intra = y_intra + bonus[..., None] * vf
+
+    # inter-chunk state recurrence
+    k_tail = kf * jnp.exp(cum[:, :, -1:, :, :] - cum)      # exp(<=0)
+    s_chunk = jnp.einsum("bclhp,bclhq->bchpq", k_tail, vf)  # (B,nc,H,P,P)
+    chunk_decay = jnp.exp(cum[:, :, -1])                   # (B,nc,H,P)
+    init = (jnp.zeros((b, h, p, p), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def body(state, xs):
+        s_c, dec = xs  # (B,H,P,P), (B,H,P)
+        out_state = state
+        state = state * dec[..., None] + s_c
+        return state, out_state
+
+    final_state, states_prev = jax.lax.scan(
+        body, init,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2, 3)))
+    states_prev = states_prev.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,P)
+    y_inter = jnp.einsum("bclhp,bchpq->bclhq", r_dec, states_prev)
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y, final_state
+
+
+def wkv6_decode_step(r, k, v, logw, u, state):
+    """One token. r/k/v/logw: (B,1,H,P); state (B,H,P,P) f32."""
+    rf, kf, vf, lw = (a.astype(jnp.float32)[:, 0] for a in (r, k, v, logw))
+    kv = jnp.einsum("bhp,bhq->bhpq", kf, vf)
+    y = jnp.einsum("bhp,bhpq->bhq", rf, state + u.astype(jnp.float32)[..., None] * kv)
+    state = state * jnp.exp(lw)[..., None] + kv
+    return y[:, None], state
+
+
+class Rwkv6LM(BaseModel):
+    def param_specs(self):
+        cfg = self.cfg
+        nl, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+        p = cfg.rwkv_head_dim
+        h = d // p
+        lead = (nl,)
+        ax = ("layers",)
+        tm = {
+            "ln": ParamSpec(lead + (d,), ax + ("embed",), init="ones"),
+            "mu_r": ParamSpec(lead + (d,), ax + ("embed",), init="zeros"),
+            "mu_k": ParamSpec(lead + (d,), ax + ("embed",), init="zeros"),
+            "mu_v": ParamSpec(lead + (d,), ax + ("embed",), init="zeros"),
+            "mu_g": ParamSpec(lead + (d,), ax + ("embed",), init="zeros"),
+            "mu_w": ParamSpec(lead + (d,), ax + ("embed",), init="zeros"),
+            "w_r": ParamSpec(lead + (d, d), ax + ("embed", "ssm_heads")),
+            "w_k": ParamSpec(lead + (d, d), ax + ("embed", "ssm_heads")),
+            "w_v": ParamSpec(lead + (d, d), ax + ("embed", "ssm_heads")),
+            "w_g": ParamSpec(lead + (d, d), ax + ("embed", "ssm_heads")),
+            "w_o": ParamSpec(lead + (d, d), ax + ("ssm_heads", "embed")),
+            "decay_base": ParamSpec(lead + (d,), ax + ("ssm_heads",), init="zeros"),
+            "decay_lora_a": ParamSpec(lead + (d, LORA_RANK), ax + ("embed", None)),
+            "decay_lora_b": ParamSpec(lead + (LORA_RANK, d), ax + (None, "ssm_heads"),
+                                      scale=0.01),
+            "bonus_u": ParamSpec(lead + (h, p), ax + ("ssm_heads", None),
+                                 init="zeros"),
+            "gn": ParamSpec(lead + (d,), ax + ("ssm_heads",), init="ones"),
+        }
+        cm = {
+            "ln": ParamSpec(lead + (d,), ax + ("embed",), init="ones"),
+            "mu_k": ParamSpec(lead + (d,), ax + ("embed",), init="zeros"),
+            "mu_r": ParamSpec(lead + (d,), ax + ("embed",), init="zeros"),
+            "w_k": ParamSpec(lead + (d, f), ax + ("embed", "mlp")),
+            "w_v": ParamSpec(lead + (f, d), ax + ("mlp", "embed")),
+            "w_r": ParamSpec(lead + (d, d), ax + ("embed", None)),
+        }
+        return {
+            "embed": ParamSpec((cfg.padded_vocab, d), ("vocab", "embed"),
+                               init="embed", scale=0.02),
+            "time_mix": tm,
+            "chan_mix": cm,
+            "ln_f": ParamSpec((d,), ("embed",), init="ones"),
+            "lm_head": ParamSpec((d, cfg.padded_vocab), ("embed", "vocab")),
+        }
+
+    # -- block pieces ---------------------------------------------------------
+    def _decay(self, lp, xw):
+        raw = lp["decay_base"] + jnp.tanh(
+            xw @ lp["decay_lora_a"]) @ lp["decay_lora_b"]
+        return -jnp.minimum(jnp.exp(raw.astype(jnp.float32)), DECAY_CLAMP)
+
+    def _time_mix(self, lp, h, *, shift_state=None, wkv_state=None,
+                  decode: bool = False):
+        cfg = self.cfg
+        p = cfg.rwkv_head_dim
+        b, s, d = h.shape
+        nh = d // p
+        x = L.rms_norm(h, lp["ln"])
+        if decode:
+            x_prev = shift_state[:, None, :].astype(x.dtype)  # (B,1,D)
+        else:
+            x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        new_shift = x[:, -1, :]
+
+        def mix(mu):
+            return x + (x_prev - x) * mu
+
+        r = (mix(lp["mu_r"]) @ lp["w_r"]).reshape(b, s, nh, p)
+        k = (mix(lp["mu_k"]) @ lp["w_k"]).reshape(b, s, nh, p)
+        v = (mix(lp["mu_v"]) @ lp["w_v"]).reshape(b, s, nh, p)
+        g = mix(lp["mu_g"]) @ lp["w_g"]
+        logw = self._decay(lp, mix(lp["mu_w"])).reshape(b, s, nh, p)
+        if decode:
+            y, new_state = wkv6_decode_step(r, k, v, logw, lp["bonus_u"],
+                                            wkv_state)
+        else:
+            y, new_state = wkv6_chunked(r, k, v, logw, lp["bonus_u"],
+                                        initial_state=wkv_state)
+        y = y.reshape(b, s, d).astype(h.dtype)
+        y = L.rms_norm(y, lp["gn"]) * jax.nn.silu(g)
+        return h + y @ lp["w_o"], new_shift, new_state
+
+    def _chan_mix(self, lp, h, *, shift_state=None, decode: bool = False):
+        x = L.rms_norm(h, lp["ln"])
+        if decode:
+            x_prev = shift_state[:, None, :].astype(x.dtype)
+        else:
+            x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        new_shift = x[:, -1, :]
+        xk = x + (x_prev - x) * lp["mu_k"]
+        xr = x + (x_prev - x) * lp["mu_r"]
+        kk = jnp.square(jax.nn.relu(xk @ lp["w_k"]))
+        out = jax.nn.sigmoid(xr @ lp["w_r"]) * (kk @ lp["w_v"])
+        return h + out, new_shift
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        h = params["embed"][batch["tokens"]]
+        h = constrain(h, ("batch", "seq", "act_embed"))
+
+        def body(h, lps):
+            tm, cm = lps
+            h, _, _ = self._time_mix(tm, h)
+            h, _ = self._chan_mix(cm, h)
+            return constrain(h, ("batch", "seq", "act_embed")), None
+
+        step = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(step, h, (params["time_mix"], params["chan_mix"]))
+        h = L.rms_norm(h, params["ln_f"])
+        logits = masked_lm_head(h, params["lm_head"], cfg.vocab)
+        return constrain(logits, ("batch", "seq", "act_vocab")), {}
+
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        d = cfg.d_model
+        p = cfg.rwkv_head_dim
+        nh = d // p
+        nl = cfg.n_layers
+        return {
+            "wkv": ParamSpec((nl, batch_size, nh, p, p),
+                             ("layers", "batch", "ssm_heads", None, None),
+                             dtype=jnp.float32, init="zeros"),
+            "shift_tm": ParamSpec((nl, batch_size, d),
+                                  ("layers", "batch", None),
+                                  dtype=dtype, init="zeros"),
+            "shift_cm": ParamSpec((nl, batch_size, d),
+                                  ("layers", "batch", None),
+                                  dtype=dtype, init="zeros"),
+        }
+
+    def decode_step(self, params, cache, tokens, cur_index):
+        cfg = self.cfg
+        h = params["embed"][tokens]
+
+        def body(h, xs):
+            tm, cm, wkv_s, sh_tm, sh_cm = xs
+            h, new_sh_tm, new_wkv = self._time_mix(
+                tm, h, shift_state=sh_tm, wkv_state=wkv_s, decode=True)
+            h, new_sh_cm = self._chan_mix(cm, h, shift_state=sh_cm, decode=True)
+            return h, (new_wkv, new_sh_tm, new_sh_cm)
+
+        h, (new_wkv, new_sh_tm, new_sh_cm) = jax.lax.scan(
+            body, h,
+            (params["time_mix"], params["chan_mix"], cache["wkv"],
+             cache["shift_tm"], cache["shift_cm"]))
+        h = L.rms_norm(h, params["ln_f"])
+        logits = masked_lm_head(h, params["lm_head"], cfg.vocab)
+        return logits, {"wkv": new_wkv, "shift_tm": new_sh_tm.astype(jnp.bfloat16),
+                        "shift_cm": new_sh_cm.astype(jnp.bfloat16)}

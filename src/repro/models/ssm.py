@@ -1,0 +1,381 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid (Mamba2 backbone with a *shared*
+attention block applied every ``attn_every`` layers).
+
+The SSD computation uses the chunked algorithm (Dao & Gu, 2024): dense
+intra-chunk attention-like term with per-head scalar decay + inter-chunk
+recurrent state passing — O(S * Lc) instead of O(S^2), with all decay
+exponentials evaluated on (g_t - g_j) <= 0 so there is no overflow path.
+``repro.kernels.ssd_scan`` is the Pallas TPU version of the same algorithm;
+``repro.kernels.ref.ssd_reference`` is the sequential oracle both are tested
+against.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.model import BaseModel, masked_lm_head
+from repro.models.module import ParamSpec
+from repro.models.transformer import _attn_specs, _mlp_specs
+
+CONV_K = 4  # mamba2 depthwise conv kernel width
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)  inputs (pre-scaled by dt outside)
+    dt: jax.Array,     # (B, S, H)     softplus'd step sizes
+    A: jax.Array,      # (H,)          negative decay rates
+    Bm: jax.Array,     # (B, S, N)     input projection (ngroups=1)
+    Cm: jax.Array,     # (B, S, N)     output projection
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P)). Internals in f32."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    lc = min(chunk, s)
+    if s % lc != 0:
+        pad = lc - s % lc
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // lc
+
+    xf = (x * dt[..., None]).astype(jnp.float32).reshape(b, nc, lc, h, p)
+    a = (dt.astype(jnp.float32) * A.astype(jnp.float32)).reshape(b, nc, lc, h)
+    Bc = Bm.astype(jnp.float32).reshape(b, nc, lc, n)
+    Cc = Cm.astype(jnp.float32).reshape(b, nc, lc, n)
+
+    g = jnp.cumsum(a, axis=2)                      # (B,nc,L,H) cumulative log-decay
+    # intra-chunk: y[t] += sum_{j<=t} exp(g_t - g_j) (C_t.B_j) x_j
+    diff = g[:, :, :, None, :] - g[:, :, None, :, :]   # (B,nc,L,L,H), t index 2
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)         # (B,nc,L,L)
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", cb, decay, xf)
+
+    # chunk summaries: S_c = sum_j exp(g_last - g_j) B_j (x) x_j
+    wlast = jnp.exp(g[:, :, -1:, :] - g)               # (B,nc,L,H)
+    s_chunk = jnp.einsum("bcln,bclh,bclhp->bchnp", Bc, wlast, xf)
+    chunk_decay = jnp.exp(g[:, :, -1, :])              # (B,nc,H)
+
+    # inter-chunk recurrence
+    init = (jnp.zeros((b, h, n, p), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def body(state, xs):
+        s_c, dec = xs  # (B,H,N,P), (B,H)
+        out_state = state  # state *entering* this chunk
+        state = state * dec[..., None, None] + s_c
+        return state, out_state
+
+    (final_state, states_prev) = jax.lax.scan(
+        body, init,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    states_prev = states_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp", Cc, jnp.exp(g), states_prev)
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jax.Array,    # (B, 1, H, P)
+    dt: jax.Array,   # (B, 1, H)
+    A: jax.Array,    # (H,)
+    Bm: jax.Array,   # (B, 1, N)
+    Cm: jax.Array,   # (B, 1, N)
+    state: jax.Array,  # (B, H, N, P) f32
+) -> Tuple[jax.Array, jax.Array]:
+    xf = (x * dt[..., None]).astype(jnp.float32)[:, 0]       # (B,H,P)
+    dec = jnp.exp(dt.astype(jnp.float32)[:, 0] * A)          # (B,H)
+    state = state * dec[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm.astype(jnp.float32)[:, 0], xf)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32)[:, 0], state)
+    return y[:, None], state  # (B,1,H,P)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg: ArchConfig, nl: int) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    conv_dim = din + 2 * n
+    d_in_proj = 2 * din + 2 * n + h
+    lead = (nl,)
+    ax = ("layers",)
+    return {
+        "ln": ParamSpec(lead + (d,), ax + ("embed",), init="ones"),
+        "in_proj": ParamSpec(lead + (d, d_in_proj), ax + ("embed", "ssm_heads")),
+        "conv_w": ParamSpec(lead + (CONV_K, conv_dim), ax + (None, "ssm_heads"),
+                            scale=0.5),
+        "conv_b": ParamSpec(lead + (conv_dim,), ax + ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamSpec(lead + (h,), ax + ("ssm_heads",), init="zeros"),
+        "A_log": ParamSpec(lead + (h,), ax + ("ssm_heads",), init="ones"),
+        "D": ParamSpec(lead + (h,), ax + ("ssm_heads",), init="ones"),
+        "gate_ln": ParamSpec(lead + (din,), ax + ("ssm_heads",), init="ones"),
+        "out_proj": ParamSpec(lead + (din, d), ax + ("ssm_heads", "embed")),
+    }
+
+
+def _split_in_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d, kernel CONV_K. xbc: (B,S,C), w: (K,C).
+
+    Returns (out (B,S,C), new_state (B,K-1,C)) — state carries the last K-1
+    inputs for decode.
+    """
+    k = w.shape[0]
+    if state is None:
+        ctx = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(ctx[:, i:i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    new_state = ctx[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_block(cfg: ArchConfig, lp, h_in: jax.Array, *,
+                 ssm_state=None, conv_state=None, decode: bool = False):
+    """Returns (h_out, new_ssm_state, new_conv_state)."""
+    din, n, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p = cfg.ssm_head_dim
+    x = L.rms_norm(h_in, lp["ln"])
+    zxbcdt = x @ lp["in_proj"]
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(xbc, lp["conv_w"], lp["conv_b"],
+                                 state=conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    b, s, _ = xs.shape
+    xh = xs.reshape(b, s, nh, p)
+    if decode:
+        y, new_state = ssd_decode_step(xh, dt, A, Bm, Cm, ssm_state)
+    else:
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                   initial_state=ssm_state)
+    y = y + lp["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, din).astype(h_in.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_ln"])
+    return h_in + y @ lp["out_proj"], new_state, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Pure Mamba2 LM (used for testing + as a family baseline)
+# ---------------------------------------------------------------------------
+
+class Mamba2LM(BaseModel):
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                               ("vocab", "embed"), init="embed", scale=0.02),
+            "mamba": mamba2_specs(cfg, cfg.n_layers),
+            "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            "lm_head": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+        }
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        h = params["embed"][batch["tokens"]]
+        h = constrain(h, ("batch", "seq", "act_embed"))
+
+        def body(h, lp):
+            out, _, _ = mamba2_block(cfg, lp, h)
+            return constrain(out, ("batch", "seq", "act_embed")), None
+
+        step = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(step, h, params["mamba"])
+        h = L.rms_norm(h, params["ln_f"])
+        logits = masked_lm_head(h, params["lm_head"], cfg.vocab)
+        return constrain(logits, ("batch", "seq", "act_vocab")), {}
+
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        n, p, nh = cfg.ssm_state, cfg.ssm_head_dim, cfg.n_ssm_heads
+        conv_dim = cfg.d_inner + 2 * n
+        return {
+            "ssm": ParamSpec((cfg.n_layers, batch_size, nh, n, p),
+                             ("layers", "batch", "ssm_heads", None, None),
+                             dtype=jnp.float32, init="zeros"),
+            "conv": ParamSpec((cfg.n_layers, batch_size, CONV_K - 1, conv_dim),
+                              ("layers", "batch", None, "ssm_heads"),
+                              dtype=dtype, init="zeros"),
+        }
+
+    def decode_step(self, params, cache, tokens, cur_index):
+        cfg = self.cfg
+        h = params["embed"][tokens]
+
+        def body(h, xs):
+            lp, ssm_s, conv_s = xs
+            out, new_ssm, new_conv = mamba2_block(
+                cfg, lp, h, ssm_state=ssm_s, conv_state=conv_s, decode=True)
+            return out, (new_ssm, new_conv)
+
+        h, (new_ssm, new_conv) = jax.lax.scan(
+            body, h, (params["mamba"], cache["ssm"], cache["conv"]))
+        h = L.rms_norm(h, params["ln_f"])
+        logits = masked_lm_head(h, params["lm_head"], cfg.vocab)
+        return logits, {"ssm": new_ssm, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# Zamba2: mamba2 backbone + one shared attention block every attn_every layers
+# ---------------------------------------------------------------------------
+
+class Zamba2LM(BaseModel):
+    """38 mamba2 layers; a single *weight-shared* full-attention block (MHA +
+    SwiGLU) applied after every ``attn_every``-th mamba layer (Zamba2's
+    shared-block design; per-use LoRA adapters omitted — noted in config)."""
+
+    def _layout(self):
+        cfg = self.cfg
+        g = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        rem = cfg.n_layers - g * cfg.attn_every
+        return g, rem
+
+    def param_specs(self):
+        cfg = self.cfg
+        shared = {
+            "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            **_attn_specs(cfg, 0, prefix_axes=()),
+            **_mlp_specs(cfg, 0, prefix_axes=()),
+        }
+        return {
+            "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                               ("vocab", "embed"), init="embed", scale=0.02),
+            "mamba": mamba2_specs(cfg, cfg.n_layers),
+            "shared_attn": shared,
+            "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            "lm_head": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+        }
+
+    def _shared_attn_train(self, sp, h, positions):
+        cfg = self.cfg
+        x = L.rms_norm(h, sp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", x, sp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, sp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, sp["wv"])
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        o = L.attention(q, k, v, causal=True)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, sp["wo"])
+        x = L.rms_norm(h, sp["ln2"])
+        return h + L.swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+
+    def _mamba_span(self, params, h, lo, hi):
+        cfg = self.cfg
+        span = jax.tree.map(lambda x: x[lo:hi], params["mamba"])
+
+        def body(h, lp):
+            out, _, _ = mamba2_block(cfg, lp, h)
+            return constrain(out, ("batch", "seq", "act_embed")), None
+
+        step = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(step, h, span)
+        return h
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        g, rem = self._layout()
+        h = params["embed"][batch["tokens"]]
+        h = constrain(h, ("batch", "seq", "act_embed"))
+        positions = jnp.arange(h.shape[1])
+        for gi in range(g):
+            h = self._mamba_span(params, h, gi * cfg.attn_every,
+                                 (gi + 1) * cfg.attn_every)
+            h = self._shared_attn_train(params["shared_attn"], h, positions)
+        if rem:
+            h = self._mamba_span(params, h, g * cfg.attn_every, cfg.n_layers)
+        h = L.rms_norm(h, params["ln_f"])
+        logits = masked_lm_head(h, params["lm_head"], cfg.vocab)
+        return constrain(logits, ("batch", "seq", "act_vocab")), {}
+
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        g, _ = self._layout()
+        n, p, nh = cfg.ssm_state, cfg.ssm_head_dim, cfg.n_ssm_heads
+        conv_dim = cfg.d_inner + 2 * n
+        return {
+            "ssm": ParamSpec((cfg.n_layers, batch_size, nh, n, p),
+                             ("layers", "batch", "ssm_heads", None, None),
+                             dtype=jnp.float32, init="zeros"),
+            "conv": ParamSpec((cfg.n_layers, batch_size, CONV_K - 1, conv_dim),
+                              ("layers", "batch", None, "ssm_heads"),
+                              dtype=dtype, init="zeros"),
+            "k": ParamSpec((g, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           ("groups", "batch", "seq", "kv_heads", "head_dim"),
+                           dtype=dtype, init="zeros"),
+            "v": ParamSpec((g, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           ("groups", "batch", "seq", "kv_heads", "head_dim"),
+                           dtype=dtype, init="zeros"),
+        }
+
+    def decode_step(self, params, cache, tokens, cur_index):
+        cfg = self.cfg
+        g, rem = self._layout()
+        h = params["embed"][tokens]
+        positions = jnp.full((1,), cur_index, dtype=jnp.int32)
+        new_ssm, new_conv, new_k, new_v = [], [], [], []
+        sp = params["shared_attn"]
+        for gi in range(g):
+            for li in range(gi * cfg.attn_every, (gi + 1) * cfg.attn_every):
+                lp = jax.tree.map(lambda x: x[li], params["mamba"])
+                h, s2, c2 = mamba2_block(cfg, lp, h, ssm_state=cache["ssm"][li],
+                                         conv_state=cache["conv"][li], decode=True)
+                new_ssm.append(s2)
+                new_conv.append(c2)
+            # shared attention with this application's KV cache slot
+            x = L.rms_norm(h, sp["ln1"])
+            q = jnp.einsum("bsd,dhk->bshk", x, sp["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", x, sp["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", x, sp["wv"])
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice(cache["k"][gi], k.astype(cache["k"].dtype), (0, cur_index, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"][gi], v.astype(cache["v"].dtype), (0, cur_index, 0, 0))
+            new_k.append(kc)
+            new_v.append(vc)
+            o = L.decode_attention(q, kc, vc, cur_index)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, sp["wo"])
+            x = L.rms_norm(h, sp["ln2"])
+            h = h + L.swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+        for li in range(g * cfg.attn_every, cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[li], params["mamba"])
+            h, s2, c2 = mamba2_block(cfg, lp, h, ssm_state=cache["ssm"][li],
+                                     conv_state=cache["conv"][li], decode=True)
+            new_ssm.append(s2)
+            new_conv.append(c2)
+        h = L.rms_norm(h, params["ln_f"])
+        logits = masked_lm_head(h, params["lm_head"], cfg.vocab)
+        return logits, {
+            "ssm": jnp.stack(new_ssm),
+            "conv": jnp.stack(new_conv),
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+        }

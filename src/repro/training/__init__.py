@@ -1,0 +1,11 @@
+"""Training substrate: optimizers, step functions, checkpointing, elasticity."""
+
+from repro.training.optimizer import (  # noqa: F401
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+)
+from repro.training.train_step import make_ring_train_step, make_train_step  # noqa: F401
+from repro.training.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,151 @@
+"""Optimizers in pure JAX with shardable state pytrees.
+
+AdamW (default), Adafactor (factored second moment — arctic-480b's optimizer,
+where full Adam states cannot fit the pod), and SGD-momentum. State trees
+mirror the param tree, so ``dist.sharding.param_shardings`` applies verbatim;
+ZeRO-style extra sharding of the moments is applied by the launcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_zeros_like(params, dtype=jnp.float32):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> Dict[str, Any]:
+    return {
+        "m": _tree_zeros_like(params),
+        "v": _tree_zeros_like(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, *, lr: float, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    m = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": m, "v": v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; no momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def leaf_state(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "stats": jax.tree.map(leaf_state, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, *, lr: float, decay: float = 0.8,
+                     eps: float = 1e-30, clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-decay)
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            precond = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            update = g * jax.lax.rsqrt(jnp.maximum(precond, eps))
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            update = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            new_st = {"v": v}
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return new_st, (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    is_stat = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat = jax.tree.map(upd, grads, state["stats"], params, is_leaf=None)
+    # flat leaves are (stat_dict, new_param) tuples
+    stats = jax.tree.map(lambda x: x[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"stats": stats, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# SGD-momentum
+# ---------------------------------------------------------------------------
+
+def sgdm_init(params):
+    return {"mom": _tree_zeros_like(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def sgdm_update(grads, state, params, *, lr: float, momentum: float = 0.9,
+                weight_decay: float = 0.0):
+    def upd(g, m, p):
+        g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m = momentum * m + g
+        return m, (p.astype(jnp.float32) - lr * m).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state["mom"], params)
+    mom = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mom": mom, "step": state["step"] + 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr=...) -> (params, state)
+
+
+def make_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return Optimizer("adamw", adamw_init, adamw_update)
+    if name == "adafactor":
+        return Optimizer("adafactor", adafactor_init, adafactor_update)
+    if name == "sgdm":
+        return Optimizer("sgdm", sgdm_init, sgdm_update)
+    raise ValueError(name)

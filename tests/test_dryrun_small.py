@@ -1,0 +1,82 @@
+"""Dry-run plumbing test on a small (2x4) mesh in a subprocess — validates
+the lower+compile+analyze pipeline for one cell per family without the
+512-device cost. (The full production sweep runs via
+``python -m repro.launch.dryrun --all``; results in results/dryrun/.)"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "src")
+
+
+def run_small_dryrun(arch: str, shape: str) -> dict:
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import dataclasses
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import SHAPES, get_arch
+        from repro.dist.sharding import activate, make_rules, param_shardings
+        from repro.launch.hlo_analysis import HloCostModel
+        from repro.launch.mesh import make_dev_mesh
+        from repro.models.model import build_model
+        from repro.models.module import abstract_from_specs
+        from repro.training.optimizer import make_optimizer
+        from repro.training.train_step import make_train_step
+
+        cfg = dataclasses.replace(get_arch({arch!r}).reduced(),
+                                  name="t", remat=True)
+        shape = dataclasses.replace(SHAPES[{shape!r}], seq_len=64,
+                                    global_batch=4)
+        mesh = make_dev_mesh(2, 4)
+        rules = make_rules(mesh, fsdp=True)
+        model = build_model(cfg)
+        specs = model.param_specs()
+        params = abstract_from_specs(specs, dtype=jnp.bfloat16)
+        psh = param_shardings(rules, specs)
+        opt = make_optimizer("adamw")
+        opt_abs = jax.eval_shape(opt.init, params)
+        step = make_train_step(model, opt, lr=1e-4)
+
+        def fn(p, o, b):
+            with activate(rules):
+                return step(p, o, b)
+
+        inputs = model.input_specs(shape)
+        bsh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(("data",))), inputs)
+        jitted = jax.jit(fn, in_shardings=(psh, None, bsh))
+        compiled = jitted.lower(params, opt_abs, inputs).compile()
+        hc = HloCostModel(compiled.as_text(), 4).entry_cost()
+        mem = compiled.memory_analysis()
+        print("RESULT " + json.dumps({{
+            "flops": hc.flops, "bytes": hc.bytes,
+            "wire": hc.total_wire_bytes,
+            "temp": float(mem.temp_size_in_bytes),
+        }}))
+    """)
+    env = dict(os.environ, PYTHONPATH=REPO_SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "phi3.5-moe-42b",
+                                  "zamba2-1.2b", "rwkv6-7b"])
+def test_small_mesh_train_cell_compiles(arch):
+    r = run_small_dryrun(arch, "train_4k")
+    assert r["flops"] > 0 and r["bytes"] > 0
+    assert r["temp"] > 0

@@ -1,0 +1,114 @@
+"""HLO cost-model tests — including the measured XLA scan undercount that
+motivates the while-expanding analyzer (DESIGN.md / EXPERIMENTS.md §Roofline).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    Roofline,
+    analyze_hlo,
+    _group_size,
+    _shape_bytes,
+)
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_xla_cost_analysis_counts_scan_body_once():
+    """The motivating bug: XLA reports identical flops for scan x1 and x10."""
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def make(n):
+        def f(x):
+            def body(c, _):
+                return c @ c, None
+            y, _ = jax.lax.scan(body, x, None, length=n)
+            return y
+        return f
+
+    body_flops = 2 * 128 ** 3
+    f10 = _compile_text(make(10), a).cost_analysis()
+    # correct accounting would report ~10x the body; XLA reports ~1x
+    assert f10.get("flops") < 2 * body_flops, f10.get("flops")
+
+
+def test_analyze_hlo_multiplies_trip_counts():
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    c = analyze_hlo(_compile_text(f, a).as_text(), default_group=1)
+    assert c.flops == pytest.approx(10 * 2 * 128 ** 3, rel=1e-6)
+    assert c.unresolved_whiles == 0
+
+
+def test_analyze_hlo_remat_grad_counts_recompute():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return jax.checkpoint(lambda z: jnp.tanh(z @ z))(c), None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return jnp.sum(y)
+
+    c = analyze_hlo(_compile_text(jax.grad(f), a).as_text(), default_group=1)
+    # fwd + remat recompute + 2 bwd dots = 4x fwd
+    assert c.flops == pytest.approx(4 * 5 * 2 * 64 ** 3, rel=1e-6)
+
+
+def test_analyze_hlo_nested_scans_multiply():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, None
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    c = analyze_hlo(_compile_text(f, a).as_text(), default_group=1)
+    assert c.flops == pytest.approx(12 * 2 * 32 ** 3, rel=1e-6)
+
+
+def test_shape_bytes_parsing():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(s32[], f32[4,4], /*index=2*/bf16[2,2])") == \
+        4 + 64 + 8
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[16,16]<=[256]", 1) == 16
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 1) == 4
+    assert _group_size("no groups here", 7) == 7
+
+
+def test_roofline_terms_and_bottleneck():
+    rf = Roofline(
+        arch="a", shape="s", mesh="16x16", n_devices=256,
+        flops_per_device=1.97e14,          # exactly 1s of compute
+        bytes_per_device=8.19e11,          # exactly 1s of HBM
+        collective_wire_bytes=2 * 50e9,    # 2s of wire -> bottleneck
+        peak_memory_bytes=1e9,
+        model_flops=1.97e14 * 256,         # all flops useful
+    )
+    assert rf.compute_s == pytest.approx(1.0)
+    assert rf.memory_s == pytest.approx(1.0)
+    assert rf.collective_s == pytest.approx(2.0)
+    assert rf.bottleneck == "collective"
+    assert rf.useful_flops_fraction == pytest.approx(1.0)
+    assert rf.roofline_fraction == pytest.approx(0.5)

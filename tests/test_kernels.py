@@ -1,0 +1,174 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import mha_reference, ssd_reference, wkv6_reference
+from repro.kernels.rwkv6_wkv import wkv6_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.models.rwkv import DECAY_CLAMP, wkv6_chunked
+from repro.models.ssm import ssd_chunked
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96),
+                                           (False, None)])
+def test_flash_attention_matches_ref(dtype, causal, window):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, hq, hkv, d = 2, 192, 4, 2, 64
+    q = rand(keys[0], (b, s, hq, d), dtype)
+    k = rand(keys[1], (b, s, hkv, d), dtype)
+    v = rand(keys[2], (b, s, hkv, d), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    ref = mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype] * 10)
+
+
+@given(
+    s=st.integers(16, 300),
+    hq_mult=st.integers(1, 4),
+    hkv=st.integers(1, 3),
+    d=st.sampled_from([32, 64]),
+    block=st.sampled_from([32, 64, 128]),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_shape_sweep(s, hq_mult, hkv, d, block):
+    hq = hkv * hq_mult
+    keys = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = rand(keys[0], (1, s, hq, d))
+    k = rand(keys[1], (1, s, hkv, d))
+    v = rand(keys[2], (1, s, hkv, d))
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=block,
+                                 block_k=block, interpret=True)
+    ref = mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-3)
+
+
+def test_flash_attention_ops_wrapper_runs():
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = rand(keys[0], (1, 128, 4, 32))
+    k = rand(keys[1], (1, 128, 4, 32))
+    v = rand(keys[2], (1, 128, 4, 32))
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    assert out.shape == q.shape and bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2)
+# ---------------------------------------------------------------------------
+
+def ssd_inputs(key, b=2, s=96, h=3, p=16, n=8, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = rand(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (b, s, h))).astype(jnp.float32)
+    A = -jnp.exp(rand(ks[2], (h,), scale=0.5)).astype(jnp.float32)
+    Bm = rand(ks[3], (b, s, n), dtype, scale=0.5)
+    Cm = rand(ks[4], (b, s, n), dtype, scale=0.5)
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 96])
+def test_ssd_pallas_matches_sequential_ref(chunk):
+    x, dt, A, Bm, Cm = ssd_inputs(jax.random.PRNGKey(0))
+    out = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref, _ = ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_model_chunked_matches_ref():
+    x, dt, A, Bm, Cm = ssd_inputs(jax.random.PRNGKey(1))
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    ref_y, ref_state = ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref_y),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(ref_state),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(
+    s=st.integers(8, 200),
+    h=st.integers(1, 4),
+    p=st.sampled_from([8, 16]),
+    n=st.sampled_from([8, 16]),
+    chunk=st.sampled_from([16, 64]),
+)
+@settings(max_examples=10, deadline=None)
+def test_ssd_shape_sweep(s, h, p, n, chunk):
+    x, dt, A, Bm, Cm = ssd_inputs(jax.random.PRNGKey(s), b=1, s=s, h=h, p=p, n=n)
+    out = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref, _ = ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+def wkv_inputs(key, b=2, s=80, h=3, p=16, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    r = rand(ks[0], (b, s, h, p), dtype, scale=0.5)
+    k = rand(ks[1], (b, s, h, p), dtype, scale=0.5)
+    v = rand(ks[2], (b, s, h, p), dtype, scale=0.5)
+    # negative log-decay within the model's clamp
+    logw = -jnp.minimum(jnp.exp(rand(ks[3], (b, s, h, p), scale=0.7)),
+                        DECAY_CLAMP).astype(jnp.float32)
+    u = rand(ks[4], (h, p), scale=0.3)
+    return r, k, v, logw, u
+
+
+@pytest.mark.parametrize("chunk", [8, 32])
+def test_wkv_pallas_matches_sequential_ref(chunk):
+    r, k, v, logw, u = wkv_inputs(jax.random.PRNGKey(0))
+    out = wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=True)
+    ref, _ = wkv6_reference(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_wkv_model_chunked_matches_ref():
+    r, k, v, logw, u = wkv_inputs(jax.random.PRNGKey(1))
+    y, state = wkv6_chunked(r, k, v, logw, u)
+    ref_y, ref_state = wkv6_reference(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref_y),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(ref_state),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(
+    s=st.integers(4, 120),
+    h=st.integers(1, 3),
+    p=st.sampled_from([8, 16, 32]),
+    chunk=st.sampled_from([8, 16, 32]),
+)
+@settings(max_examples=10, deadline=None)
+def test_wkv_shape_sweep(s, h, p, chunk):
+    r, k, v, logw, u = wkv_inputs(jax.random.PRNGKey(s), b=1, s=s, h=h, p=p)
+    out = wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=True)
+    ref, _ = wkv6_reference(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-3)

@@ -1,0 +1,63 @@
+"""LP solver tests: HiGHS exact vs JAX PDHG first-order, cross-validated."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lp import pdhg_solve, solve_ilp, solve_lp
+
+
+def test_lp_simple_knapsack():
+    # max 3x + 2y s.t. x + y <= 4, x <= 3, y <= 3
+    r = solve_lp(np.array([3.0, 2.0]), A_ub=np.array([[1.0, 1.0]]),
+                 b_ub=np.array([4.0]), upper=np.array([3.0, 3.0]))
+    assert r.status == 0
+    assert r.value == pytest.approx(11.0)  # x=3, y=1
+
+
+def test_ilp_matches_handcomputed():
+    # max 5a + 4b + 3c, a+b+c <= 2, binary => pick a and b
+    r = solve_ilp(np.array([5.0, 4.0, 3.0]),
+                  A_ub=np.array([[1.0, 1.0, 1.0]]), b_ub=np.array([2.0]),
+                  upper=np.ones(3))
+    assert r.value == pytest.approx(9.0)
+    assert set(np.round(r.x)) <= {0.0, 1.0}
+
+
+def test_pdhg_matches_highs_small():
+    rng = np.random.default_rng(0)
+    n, m = 12, 6
+    c = rng.uniform(0.1, 1.0, n)
+    A = rng.uniform(0.0, 1.0, (m, n))
+    b = rng.uniform(1.0, 3.0, m)
+    exact = solve_lp(c, A_ub=A, b_ub=b, upper=np.ones(n))
+    approx = pdhg_solve(c, A, b, upper=np.ones(n), iters=8000)
+    assert approx.value == pytest.approx(exact.value, rel=0.02)
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_pdhg_primal_feasible_and_bounded(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 10, 5
+    c = rng.uniform(0.1, 1.0, n)
+    A = rng.uniform(0.0, 1.0, (m, n))
+    b = rng.uniform(0.5, 2.0, m)
+    exact = solve_lp(c, A_ub=A, b_ub=b, upper=np.ones(n))
+    approx = pdhg_solve(c, A, b, upper=np.ones(n), iters=6000)
+    # never exceeds the true optimum by more than feasibility slack
+    assert approx.value <= exact.value * 1.05 + 1e-6
+    # primal iterate respects box
+    assert np.all(approx.x >= -1e-6) and np.all(approx.x <= 1.0 + 1e-6)
+
+
+def test_ilp_le_lp_bound():
+    rng = np.random.default_rng(3)
+    n, m = 8, 4
+    c = rng.uniform(0.1, 1.0, n)
+    A = rng.uniform(0.0, 1.0, (m, n))
+    b = rng.uniform(0.5, 2.0, m)
+    lp = solve_lp(c, A_ub=A, b_ub=b, upper=np.ones(n))
+    ilp = solve_ilp(c, A_ub=A, b_ub=b, upper=np.ones(n))
+    assert ilp.value <= lp.value + 1e-9

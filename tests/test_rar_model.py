@@ -1,0 +1,97 @@
+"""Eq. (1) analytical model tests — paper §III."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.rar_model import (
+    RarJobProfile,
+    optimal_worker_count,
+    profile_from_arch,
+    rar_allreduce_time,
+    rar_iteration_time,
+    rar_iteration_time_asymptote,
+    rar_ring_bytes_per_worker,
+    ps_worker_bytes,
+)
+
+
+def test_eq1_components():
+    # hand-computed example: d=1e6, b=1e8 elem/s, G=1e9 elem/s, w=4
+    t = rar_allreduce_time(4, d=1e6, bandwidth=1e8, reduce_speed=1e9)
+    expected = 1e6 * 3 / 4 * (2 / 1e8 + 1 / 1e9)
+    assert math.isclose(t, expected, rel_tol=1e-12)
+
+
+def test_eq1_single_worker_no_comm():
+    assert rar_allreduce_time(1, d=1e6, bandwidth=1e8, reduce_speed=1e9) == 0.0
+    tau = rar_iteration_time(
+        1, d=1e6, bandwidth=1e8, reduce_speed=1e9,
+        t_fwd_per_sample=1e-3, t_bwd=2e-3, batch_size=32, overhead=1e-4,
+    )
+    assert math.isclose(tau, 1e-3 * 32 + 2e-3 + 1e-4, rel_tol=1e-12)
+
+
+def test_eq1_monotone_increasing_in_w_comm():
+    """d(w-1)/w is increasing in w: more workers, more ring steps."""
+    ts = [rar_allreduce_time(w, d=1e6, bandwidth=1e8, reduce_speed=1e9)
+          for w in range(2, 64)]
+    assert all(b > a for a, b in zip(ts, ts[1:]))
+
+
+def test_eq1_asymptote_upper_bound():
+    kw = dict(d=1e7, bandwidth=1e8, reduce_speed=1e9, t_fwd_per_sample=1e-3,
+              t_bwd=2e-3, batch_size=16, overhead=1e-4)
+    bound = rar_iteration_time_asymptote(**kw)
+    for w in (2, 8, 64, 1024):
+        assert rar_iteration_time(w, **kw) < bound
+    assert rar_iteration_time(10**7, **kw) == pytest.approx(bound, rel=1e-4)
+
+
+def test_rar_vs_ps_scaling():
+    """RAR per-worker bytes are asymptotically w-independent; PS grows ~w."""
+    d = 1e6
+    rar_64 = rar_ring_bytes_per_worker(d, 64)
+    rar_1024 = rar_ring_bytes_per_worker(d, 1024)
+    assert rar_1024 / rar_64 < 1.02  # near-flat
+    assert ps_worker_bytes(d, 1024) / ps_worker_bytes(d, 64) == pytest.approx(16.0)
+
+
+def test_vectorized_matches_scalar():
+    ws = np.arange(1, 33)
+    vec = rar_allreduce_time(ws, d=1e6, bandwidth=1e8, reduce_speed=1e9)
+    for i, w in enumerate(ws):
+        assert float(vec[i]) == pytest.approx(
+            rar_allreduce_time(int(w), d=1e6, bandwidth=1e8, reduce_speed=1e9),
+            rel=1e-5,
+        )
+
+
+@given(
+    d=st.floats(1e4, 1e10),
+    b=st.floats(1e6, 1e12),
+    g=st.floats(1e6, 1e12),
+    w=st.integers(1, 4096),
+)
+@settings(max_examples=200, deadline=None)
+def test_iteration_time_positive_and_finite(d, b, g, w):
+    tau = rar_iteration_time(
+        w, d=d, bandwidth=b, reduce_speed=g,
+        t_fwd_per_sample=1e-4, t_bwd=1e-3, batch_size=8, overhead=0.0,
+    )
+    assert np.isfinite(tau) and tau > 0
+
+
+def test_profile_from_arch_sane():
+    p = profile_from_arch(n_params=1.2e9, tokens_per_batch=4096 * 8)
+    assert p.d == 1.2e9
+    tau2 = p.iteration_time(2)
+    tau8 = p.iteration_time(8)
+    assert tau8 > tau2 > 0
+    w = optimal_worker_count(p, w_max=16)
+    assert 1 <= w <= 16
+    # throughput at chosen w is at least that of w=1
+    assert w / p.iteration_time(w) >= 1.0 / p.iteration_time(1)

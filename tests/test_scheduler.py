@@ -1,0 +1,103 @@
+"""Algorithm 1 + baselines + simulator behaviour tests."""
+
+import numpy as np
+import pytest
+
+from repro.cluster import make_fat_tree
+from repro.cluster.simulator import ClusterSimulator, FaultConfig
+from repro.cluster.trace import JobTraceConfig, generate_jobs
+from repro.core.baselines import DrfScheduler, FifoScheduler, LasScheduler
+from repro.core.gadget import GadgetScheduler, run_offline_horizon
+from repro.core.gvne import GvneConfig
+from repro.core.problem import DDLJSInstance, ScheduleState
+
+
+@pytest.fixture(scope="module")
+def small_instance():
+    graph = make_fat_tree(n_servers=10, seed=1)
+    jobs = generate_jobs(JobTraceConfig(n_jobs=12, horizon=20, seed=2))
+    return DDLJSInstance(graph=graph, jobs=jobs, horizon=20)
+
+
+def test_online_no_lookahead(small_instance):
+    """Jobs never receive workers before arrival (constraint (6))."""
+    state = run_offline_horizon(small_instance, GadgetScheduler(GvneConfig(seed=0)))
+    for j in small_instance.jobs:
+        for emb in state.history[j.id]:
+            pass  # history embeds have no timestamps; check via z bookkeeping
+    # re-run slot by slot and assert allocation only after arrival
+    state = ScheduleState(small_instance)
+    sched = GadgetScheduler(GvneConfig(seed=0))
+    from repro.cluster.topology import ResourceState
+
+    for t in range(small_instance.horizon):
+        res = ResourceState(small_instance.graph)
+        decision = sched.schedule_slot(t, res, state)
+        for e in decision.embeddings:
+            assert small_instance.job(e.job_id).arrival <= t
+        state.commit_slot(decision.embeddings)
+
+
+def test_budget_never_exceeded(small_instance):
+    """Accumulated worker-time respects min_r F_i^r / l_i^r (constraints 3/11)."""
+    for sched in [GadgetScheduler(GvneConfig(seed=0)), FifoScheduler(),
+                  DrfScheduler(), LasScheduler()]:
+        state = run_offline_horizon(small_instance, sched)
+        for j in small_instance.jobs:
+            assert state.z[j.id] <= j.worker_time_budget() + 1e-6
+
+
+def test_per_slot_worker_cap(small_instance):
+    """No job ever gets more than N_i workers in one slot (constraint 2)."""
+    from repro.cluster.topology import ResourceState
+
+    state = ScheduleState(small_instance)
+    sched = GadgetScheduler(GvneConfig(seed=0))
+    for t in range(small_instance.horizon):
+        res = ResourceState(small_instance.graph)
+        decision = sched.schedule_slot(t, res, state)
+        for e in decision.embeddings:
+            assert e.n_workers <= small_instance.job(e.job_id).max_workers
+        state.commit_slot(decision.embeddings)
+
+
+def test_utility_monotone_over_time(small_instance):
+    sim = ClusterSimulator(small_instance)
+    res = sim.run(GadgetScheduler(GvneConfig(seed=0)))
+    utils = [r.utility_total for r in res.records]
+    assert all(b >= a - 1e-9 for a, b in zip(utils, utils[1:]))
+
+
+def test_simulator_with_failures_still_consistent(small_instance):
+    sim = ClusterSimulator(
+        small_instance,
+        FaultConfig(server_fail_prob=0.1, straggler_prob=0.2, seed=5),
+    )
+    res = sim.run(GadgetScheduler(GvneConfig(seed=0)))
+    # budgets still respected under faults
+    for j in small_instance.jobs:
+        assert res.state.z[j.id] <= j.worker_time_budget() + 1e-6
+    assert any(r.failed_servers > 0 for r in res.records)
+
+
+def test_gadget_at_least_matches_fifo_under_contention():
+    graph = make_fat_tree(n_servers=8, seed=3)
+    jobs = generate_jobs(JobTraceConfig(n_jobs=40, horizon=30,
+                                        mean_interarrival=0.5, seed=4))
+    inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=30)
+    gadget = ClusterSimulator(inst).run(GadgetScheduler(GvneConfig(seed=0)))
+    fifo = ClusterSimulator(inst).run(FifoScheduler())
+    assert gadget.total_utility >= 0.95 * fifo.total_utility
+
+
+def test_submodularity_of_objective(small_instance):
+    """Lemma 5: marginal gain of one allocation shrinks as the base grows."""
+    job = small_instance.jobs[0]
+    state = ScheduleState(small_instance)
+    gain_at_zero = state.marginal_utility(job, 2)
+    state.z[job.id] = 50.0
+    gain_at_fifty = state.marginal_utility(job, 2)
+    state.z[job.id] = 5000.0
+    gain_far = state.marginal_utility(job, 2)
+    # sigmoid tail: eventually diminishing
+    assert gain_far <= gain_at_fifty + 1e-9 or gain_far <= gain_at_zero + 1e-9

@@ -1,0 +1,111 @@
+"""Substrate graph + embedding invariants (paper constraints (4), (8), (9))."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster.topology import (
+    Embedding,
+    ResourceState,
+    SubstrateGraph,
+    make_fat_tree,
+)
+
+
+@pytest.fixture
+def graph():
+    return make_fat_tree(n_servers=8, n_racks=2, n_core=2, seed=0)
+
+
+def test_paths_same_rack_via_tor(graph):
+    same_rack = [
+        (a.id, b.id)
+        for a in graph.servers
+        for b in graph.servers
+        if a.id != b.id and a.rack == b.rack
+    ]
+    assert same_rack, "fixture should have same-rack pairs"
+    s, s2 = same_rack[0]
+    ps = graph.paths(s, s2)
+    assert len(ps) == 1 and len(ps[0]) == 3 and ps[0][1].startswith("r")
+
+
+def test_paths_cross_rack_ecmp(graph):
+    cross = [
+        (a.id, b.id)
+        for a in graph.servers
+        for b in graph.servers
+        if a.rack != b.rack
+    ]
+    s, s2 = cross[0]
+    ps = graph.paths(s, s2)
+    assert len(ps) == graph.n_core  # one per core switch
+    for p in ps:
+        assert len(p) == 5
+
+
+def test_ring_validation_degree2(graph):
+    # server repeated in ring order => degree > 2 => invalid (Eq. 9)
+    emb = Embedding(0, [(0, 1), (1, 1), (0, 1)], [], 1.0)
+    with pytest.raises(ValueError):
+        emb.validate_ring()
+
+
+def test_colocated_ring_no_paths(graph):
+    emb = Embedding(0, [(0, 3)], [], 1.0)
+    emb.validate_ring()  # fine
+    bad = Embedding(0, [(0, 3)], [("s0", "r0", "s1")], 1.0)
+    with pytest.raises(ValueError):
+        bad.validate_ring()
+
+
+def test_commit_release_roundtrip(graph):
+    res = ResourceState(graph)
+    demands = {"gpus": 1.0, "mem": 1.0}
+    target = max(graph.servers, key=lambda s: s.caps["gpus"])
+    before = dict(res.free_node[target.id])
+    emb = Embedding(7, [(target.id, 2)], [], 0.5)
+    res.commit(emb, demands)
+    assert res.free_node[target.id]["gpus"] == before["gpus"] - 2
+    res.release(7, demands)
+    assert res.free_node[target.id] == before
+
+
+def test_commit_rejects_overcapacity(graph):
+    res = ResourceState(graph)
+    demands = {"gpus": 1.0, "mem": 1.0}
+    target = graph.servers[0]
+    emb = Embedding(1, [(target.id, int(target.caps["gpus"]) + 1)], [], 0.1)
+    with pytest.raises(ValueError):
+        res.commit(emb, demands)
+
+
+def test_bandwidth_depletes_on_paths(graph):
+    res = ResourceState(graph)
+    a, b = graph.servers[0], graph.servers[1]
+    p_fwd = res.best_path(a.id, b.id, 1e9)
+    p_rev = res.best_path(b.id, a.id, 1e9)
+    assert p_fwd is not None and p_rev is not None
+    emb = Embedding(3, [(a.id, 1), (b.id, 1)], [p_fwd, p_rev], 1e9)
+    free_before = res.free_edge[(f"s{a.id}", p_fwd[1])]
+    res.commit(emb, {"gpus": 1.0, "mem": 1.0})
+    assert res.free_edge[(f"s{a.id}", p_fwd[1])] == pytest.approx(free_before - 1e9)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_fat_tree_generation_invariants(seed):
+    g = make_fat_tree(n_servers=10, seed=seed)
+    assert len(g.servers) == 10
+    for s in g.servers:
+        assert s.caps["gpus"] in (1.0, 2.0, 4.0, 8.0)
+        assert 0 <= s.rack < g.n_racks
+        # every server bidirectionally linked to its rack switch
+        assert (s.node, f"r{s.rack}") in g.links
+        assert (f"r{s.rack}", s.node) in g.links
+    # all cross-server path endpoints valid + edges exist
+    a, b = g.servers[0].id, g.servers[-1].id
+    for p in g.paths(a, b):
+        for e in SubstrateGraph.path_edges(p):
+            assert e in g.links
