@@ -1,0 +1,67 @@
+"""Version compatibility shims for the pinned jax in this image.
+
+jax 0.4.37 ships ``shard_map`` under ``jax.experimental`` with a
+``check_rep`` kwarg; newer releases export ``jax.shard_map`` taking
+``check_vma``. The repo (and its test subprocesses) use the modern
+spelling, so :func:`install` bridges the gap when needed. Loaded from
+``src/sitecustomize.py`` (any process with ``PYTHONPATH=src``) and from
+``tests/conftest.py``.
+"""
+
+from __future__ import annotations
+
+
+def install() -> None:
+    import jax
+
+    if not hasattr(jax.lax, "axis_size"):
+        # lax.axis_size landed after 0.4.37; psum of a unit constant yields
+        # the same static axis size under shard_map/pmap tracing
+        def axis_size(axis_name):
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    try:
+        from jax._src import stages
+
+        _orig_cost_analysis = stages.Compiled.cost_analysis
+        if not getattr(_orig_cost_analysis, "_compat_shim", False):
+
+            def cost_analysis(self):
+                # pre-0.5 jax wraps the properties dict in a one-element list
+                out = _orig_cost_analysis(self)
+                if isinstance(out, (list, tuple)) and len(out) == 1:
+                    return out[0]
+                return out
+
+            cost_analysis._compat_shim = True
+            stages.Compiled.cost_analysis = cost_analysis
+    except Exception:  # pragma: no cover
+        pass
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        if not hasattr(pltpu, "CompilerParams"):
+            # renamed from TPUCompilerParams after 0.4.x
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+    except Exception:  # pragma: no cover — pallas absent on some backends
+        pass
+
+    if hasattr(jax, "shard_map"):
+        return
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kwargs):
+        if check_rep is None:
+            # modern check_vma maps onto legacy check_rep; default off — the
+            # legacy replication checker predates these manual collectives
+            check_rep = bool(check_vma) if check_vma is not None else False
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep, **kwargs)
+
+    shard_map.__doc__ = _shard_map.__doc__
+    jax.shard_map = shard_map

@@ -13,9 +13,12 @@ directly comparable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional
 
-from repro.cluster.topology import Embedding, ResourceState, SubstrateGraph
+if TYPE_CHECKING:  # annotation-only: a runtime import would close the
+    # core.problem -> cluster -> cluster.trace -> core.problem cycle
+    from repro.cluster.topology import Embedding, SubstrateGraph
+
 from repro.core.rar_model import RarJobProfile
 from repro.core.utility import Utility
 

@@ -1,0 +1,33 @@
+"""Distribution layer: the executable counterpart of the paper's RAR model.
+
+``collectives``   — ppermute ring all-reduce (the paper's 2(w-1)-step ring),
+                    bidirectional and reduce-scatter variants, wire-cost math.
+``compression``   — int8 quantized / error-feedback compressed rings.
+``overlap``       — gradient accumulation (microbatching) and bucketing.
+``sharding``      — logical-axis -> mesh-axis rules for the GSPMD/pjit path.
+"""
+
+from repro.dist import collectives, compression, overlap, sharding  # noqa: F401
+from repro.dist.collectives import (  # noqa: F401
+    bidirectional_ring_all_reduce,
+    psum_all_reduce,
+    ring_all_reduce,
+    ring_reduce_scatter,
+    ring_wire_elements,
+)
+from repro.dist.compression import (  # noqa: F401
+    compressed_ring_all_reduce,
+    compressed_wire_bytes,
+    dequantize,
+    ef_compressed_all_reduce,
+    quantization_error,
+    quantize,
+)
+from repro.dist.overlap import bucketed_psum, microbatch_grads  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    ShardingRules,
+    activate,
+    constrain,
+    make_rules,
+    param_shardings,
+)

@@ -1,0 +1,112 @@
+"""Gradient compression for the ring: int8 quantization + error feedback.
+
+The ring's wire term d(w-1)/w * 2/b is bandwidth-bound for large models, so
+shrinking elements 4x (f32 -> int8 + one f32 scale per hop) shifts the
+paper's Eq. (1) toward compute. Two variants:
+
+  * ``compressed_ring_all_reduce`` — every hop's payload is quantized
+    (per-hop rounding error, no state). Share-Reduce re-quantizes partial
+    sums each hop; Share-Only forwards each reduced chunk's int8 payload
+    verbatim, so gather adds no extra error beyond one quantization.
+  * ``ef_compressed_all_reduce`` — error feedback (Karimireddy et al.):
+    each worker adds its residual before compressing and carries the new
+    residual, recovering exact-SGD convergence rates.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.collectives import _all_gather_chunks, _as_chunks, _ring_perm
+
+QMAX = 127.0  # symmetric int8 range
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization: (int8 values, f32 scale).
+
+    scale = max|x| / 127 so the round-off error is bounded by scale/2.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(flat))
+    scale = jnp.where(amax > 0, amax / QMAX, 1.0)
+    q = jnp.clip(jnp.round(flat / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(qx: Tuple[jax.Array, jax.Array], size: int,
+               shape: Tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`quantize`; size/shape restore the original layout."""
+    q, scale = qx
+    return (q.astype(jnp.float32) * scale)[:size].reshape(shape)
+
+
+def quantization_error(x: jax.Array) -> jax.Array:
+    """Residual x - Q(x) — the quantity error feedback carries forward."""
+    return x.astype(jnp.float32) - dequantize(quantize(x), x.size, x.shape)
+
+
+def compressed_ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Ring all-reduce with int8-quantized hop payloads (stateless)."""
+    w = lax.axis_size(axis_name)
+    if w == 1:
+        return x
+    chunks, pad = _as_chunks(x.astype(jnp.float32), w)
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(w)
+
+    # Share-Reduce: quantize each hop's partial sum before sending.
+    for s in range(w - 1):
+        send = jnp.take(chunks, (idx - s) % w, axis=0)
+        q, scale = quantize(send)
+        q = lax.ppermute(q, axis_name, perm)
+        scale = lax.ppermute(scale, axis_name, perm)
+        chunks = chunks.at[(idx - s - 1) % w].add(q.astype(jnp.float32) * scale)
+
+    # Share-Only: quantize the owned reduced chunk once, forward int8+scale
+    # verbatim (each chunk pays exactly one gather-phase quantization).
+    own = (idx + 1) % w
+    q_own, s_own = quantize(jnp.take(chunks, own, axis=0))
+    qchunks = jnp.zeros(chunks.shape, jnp.int8).at[own].set(q_own)
+    scales = jnp.zeros((w,), jnp.float32).at[own].set(s_own)
+    qchunks = _all_gather_chunks(qchunks, axis_name, idx, perm)
+    scales = _all_gather_chunks(scales[:, None], axis_name, idx, perm)[:, 0]
+
+    flat = (qchunks.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    if pad:
+        flat = flat[: flat.size - pad]
+    return flat.reshape(x.shape).astype(x.dtype)
+
+
+def ef_compressed_all_reduce(
+    g: jax.Array, residual: Optional[jax.Array], axis_name: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback compressed all-reduce.
+
+    corrected = g + residual; each worker ring-reduces Q(corrected) over the
+    int8 ring and keeps residual' = corrected - Q(corrected) for the next
+    step. Returns (sum-reduced compressed gradient, new residual). The
+    residual covers this worker's own compression; the int8 ring's per-hop
+    re-quantization of partial sums adds noise no residual tracks (small:
+    bounded by hops * max|partial|/254).
+    """
+    corrected = g.astype(jnp.float32)
+    if residual is not None:
+        corrected = corrected + residual.astype(jnp.float32)
+    compressed = dequantize(quantize(corrected), corrected.size,
+                            corrected.shape)
+    new_residual = corrected - compressed
+    reduced = compressed_ring_all_reduce(compressed, axis_name)
+    return reduced.astype(g.dtype), new_residual
+
+
+def compressed_wire_bytes(d: float, w: int, *, scale_bytes: int = 4) -> float:
+    """Per-worker wire bytes of the int8 ring: 2(w-1) hops of (d/w int8
+    payload + one f32 scale). ~3.9x below the f32 ring's 2d(w-1)/w * 4."""
+    if w <= 1:
+        return 0.0
+    return 2.0 * (w - 1.0) * (float(d) / float(w) + float(scale_bytes))

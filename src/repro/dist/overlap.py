@@ -1,0 +1,89 @@
+"""Compute/communication structuring: gradient accumulation and bucketing.
+
+``microbatch_grads`` trades activation memory for sequential microbatch
+passes (lax.scan keeps the HLO small); ``bucketed_psum`` coalesces many
+small gradient tensors into a few large all-reduces — the ring's per-hop
+latency gamma is paid per collective, so fewer, larger payloads sit closer
+to the bandwidth-bound regime Eq. (1) assumes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def microbatch_grads(loss_fn: Callable, params, batch,
+                     n_microbatches: int = 1) -> Tuple[jax.Array, Any]:
+    """Mean loss and grads of ``loss_fn(params, batch)`` accumulated over
+    ``n_microbatches`` equal slices of the batch's leading dim.
+
+    Exactly matches the full-batch value when the loss is a batch mean
+    (equal microbatch sizes), to float tolerance.
+    """
+    if n_microbatches <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n_microbatches == 0, (b, n_microbatches)
+        return x.reshape((n_microbatches, b // n_microbatches) + x.shape[1:])
+
+    mb = jax.tree.map(split, batch)
+    zero = (jnp.zeros((), jnp.float32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params))
+
+    def body(carry, b):
+        loss, grads = jax.value_and_grad(loss_fn)(params, b)
+        acc_loss, acc_grads = carry
+        return (acc_loss + loss.astype(jnp.float32),
+                jax.tree.map(jnp.add, acc_grads, grads)), None
+
+    (loss, grads), _ = lax.scan(body, zero, mb)
+    inv = 1.0 / n_microbatches
+    return loss * inv, jax.tree.map(lambda g: (g * inv).astype(g.dtype), grads)
+
+
+def bucketed_psum(grads, axis_name: str, *, n_buckets: int = 4):
+    """psum a gradient tree as ~``n_buckets`` flat fused payloads.
+
+    Leaves are packed into contiguous buckets of roughly equal element
+    count (order-preserving), concatenated per dtype, reduced with one
+    ``lax.psum`` each, then split and reshaped back. Semantically identical
+    to leaf-wise psum.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    if not leaves:
+        return grads
+    n_buckets = max(1, min(n_buckets, len(leaves)))
+    total = sum(l.size for l in leaves)
+    target = max(1, -(-total // n_buckets))  # ceil
+
+    buckets = []
+    cur, cur_size = [], 0
+    for i, leaf in enumerate(leaves):
+        cur.append(i)
+        cur_size += leaf.size
+        if cur_size >= target and len(buckets) < n_buckets - 1:
+            buckets.append(cur)
+            cur, cur_size = [], 0
+    if cur:
+        buckets.append(cur)
+
+    out = [None] * len(leaves)
+    for bucket in buckets:
+        by_dtype: Dict[Any, list] = {}
+        for i in bucket:
+            by_dtype.setdefault(leaves[i].dtype, []).append(i)
+        for dtype, idxs in by_dtype.items():
+            flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+            red = lax.psum(flat, axis_name)
+            off = 0
+            for i in idxs:
+                n = leaves[i].size
+                out[i] = red[off: off + n].reshape(leaves[i].shape)
+                off += n
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,184 @@
+"""Logical-axis sharding: ParamSpec axes -> mesh axes for the GSPMD path.
+
+Model code names *logical* axes ("embed", "heads", "batch", "act_embed", …);
+a :class:`ShardingRules` maps each to zero or more *mesh* axes for the
+current parallelism config. ``make_rules`` builds the standard layouts
+(TP over "model", DP over "pod"/"data", optional FSDP / sequence-parallel /
+pure-DP / MoE-TP); callers may further mutate ``rules.rules`` (the dry-run's
+decode path reroutes "seq" when batch or kv_heads can't shard).
+
+``constrain`` is a *contextual* sharding hint: inside ``with activate(rules)``
+it lowers to ``with_sharding_constraint``; outside (smoke tests on one
+device, explicit shard_map ring training) it is the identity, so model code
+is written once for all three execution modes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """Mesh + mutable logical-axis -> mesh-axis table."""
+
+    mesh: Mesh
+    rules: Dict[str, MeshAxes]
+
+    def resolve(self, logical: Optional[str]) -> Tuple[str, ...]:
+        """Mesh axes (possibly empty) for one logical axis name."""
+        if logical is None:
+            return ()
+        target = self.rules.get(logical)
+        if target is None:
+            return ()
+        if isinstance(target, str):
+            target = (target,)
+        return tuple(a for a in target if a in self.mesh.axis_names)
+
+    def spec_for(self, axes: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for a tuple of logical axis names.
+
+        A mesh axis may appear in at most one dim of a spec: first logical
+        axis to claim it wins (e.g. with "seq" rerouted to "model", a later
+        "kv_heads" -> "model" entry degrades to replicated — exactly the
+        decode-cache behaviour the dry-run relies on).
+        """
+        used: set = set()
+        entries = []
+        for logical in axes:
+            mesh_axes = tuple(a for a in self.resolve(logical)
+                              if a not in used)
+            used.update(mesh_axes)
+            if not mesh_axes:
+                entries.append(None)
+            elif len(mesh_axes) == 1:
+                entries.append(mesh_axes[0])
+            else:
+                entries.append(mesh_axes)
+        return P(*entries)
+
+    def spec_for_shape(self, axes: Sequence[Optional[str]],
+                       shape: Sequence[int]) -> P:
+        """Like :meth:`spec_for` but drops mesh axes a dim cannot host.
+
+        jit in/out_shardings demand exact divisibility (unlike constraint
+        hints, which GSPMD pads), so a dim whose size doesn't divide by the
+        product of its mesh axes degrades to replicated — e.g. kv_heads=2
+        on a 4-way "model" axis (the dry-run's decode-cache situation).
+        """
+        base = self.spec_for(axes)
+        entries = []
+        for dim, entry in zip(shape, base):
+            if entry is None:
+                entries.append(None)
+                continue
+            mesh_axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            ways = 1
+            for a in mesh_axes:
+                ways *= self.mesh.shape[a]
+            entries.append(entry if dim % ways == 0 else None)
+        return P(*entries)
+
+    def sharding_for(self, axes: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        spec = (self.spec_for(axes) if shape is None
+                else self.spec_for_shape(axes, shape))
+        return NamedSharding(self.mesh, spec)
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = False,
+               sequence_parallel: bool = False, pure_dp: bool = False,
+               moe_tp: bool = False) -> ShardingRules:
+    """Standard layouts over a ("pod",)("data", "model") mesh.
+
+    Defaults: batch over the DP axes, TP (heads/mlp/vocab/experts) over
+    "model". ``fsdp`` additionally shards the "embed" dim of every weight
+    over "data" (ZeRO-3 style). ``sequence_parallel`` reroutes "seq" to
+    "model". ``pure_dp`` disables TP and spreads batch over every mesh axis.
+    ``moe_tp`` shards expert FFNs over their hidden dim instead of the
+    expert dim.
+    """
+    names = mesh.axis_names
+    model = "model" if "model" in names else None
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+
+    if pure_dp:
+        batch: MeshAxes = tuple(a for a in ("pod", "data", "model")
+                                if a in names) or None
+        tp: MeshAxes = None
+    else:
+        batch = dp_axes or None
+        tp = model
+
+    rules: Dict[str, MeshAxes] = {
+        # data / activation structure
+        "batch": batch,
+        "seq": tp if sequence_parallel else None,
+        "act_embed": None,
+        "act_heads": tp,
+        "act_vocab": tp,
+        # weight dims
+        "layers": None,
+        "head_dim": None,
+        "frames": None,
+        "embed": (dp_axes or None) if fsdp else None,
+        "heads": tp,
+        "kv_heads": tp,
+        "mlp": tp,
+        "vocab": tp,
+        "ssm_heads": tp,
+        # MoE: default experts over "model"; moe_tp moves the split to the
+        # expert hidden dim (dedupe in spec_for keeps exactly one of them)
+        "experts": None if moe_tp else tp,
+        "moe_mlp": tp,
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def param_shardings(rules: ShardingRules, specs) -> Any:
+    """NamedSharding tree mirroring a (nested dict) ParamSpec tree."""
+    if isinstance(specs, dict):
+        return {k: param_shardings(rules, v) for k, v in specs.items()}
+    return rules.sharding_for(specs.axes, specs.shape)
+
+
+# -- contextual activation constraints --------------------------------------
+
+_active = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_active, "rules", None)
+
+
+@contextlib.contextmanager
+def activate(rules: ShardingRules):
+    """Make ``constrain`` lower to with_sharding_constraint under tracing."""
+    prev = current_rules()
+    _active.rules = rules
+    try:
+        yield rules
+    finally:
+        _active.rules = prev
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Sharding hint on an intermediate; identity outside ``activate``."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = rules.spec_for(axes)
+    if all(e is None for e in spec):
+        return x  # fully replicated hint adds nothing; let GSPMD choose
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

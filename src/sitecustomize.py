@@ -1,0 +1,65 @@
+"""Auto-loaded (via PYTHONPATH=src) in every repo process, including the
+multi-device test subprocesses that use ``jax.shard_map`` before importing
+``repro``. Registers a *lazy* post-import hook: the compat shims
+(:mod:`repro.compat`) install the moment jax finishes importing, so
+non-jax invocations pay no jax-import startup tax. ``repro/__init__`` also
+installs the shims, so this hook is belt-and-braces for jax-first code."""
+
+import sys
+
+
+def _install_compat():
+    try:
+        from repro.compat import install
+
+        install()
+    except Exception:  # pragma: no cover — never break interpreter startup
+        pass
+
+
+if "jax" in sys.modules:  # pragma: no cover — sitecustomize runs first
+    _install_compat()
+else:
+    class _JaxCompatFinder:
+        """meta_path hook: run compat.install() right after jax executes."""
+
+        def find_spec(self, fullname, path=None, target=None):
+            if fullname != "jax":
+                return None
+            import importlib.util
+
+            sys.meta_path.remove(self)
+            spec = importlib.util.find_spec("jax")
+            if spec is None or spec.loader is None:
+                return None
+            orig_exec = spec.loader.exec_module
+
+            def exec_module(module, _orig=orig_exec):
+                _orig(module)
+                _install_compat()
+
+            try:
+                spec.loader.exec_module = exec_module
+            except (AttributeError, TypeError):  # pragma: no cover
+                return None  # immutable loader: plain import, repro/__init__
+                # still installs the shims on first repro import
+            return spec
+
+    sys.meta_path.insert(0, _JaxCompatFinder())
+
+# chain-load any sitecustomize this one shadows (python imports only the
+# first match on sys.path; a venv/coverage hook further down must still run)
+try:
+    import os as _os
+
+    _here = _os.path.dirname(_os.path.abspath(__file__))
+    for _p in sys.path:
+        _cand = _os.path.join(_os.path.abspath(_p or "."), "sitecustomize.py")
+        if _os.path.dirname(_cand) == _here or not _os.path.isfile(_cand):
+            continue
+        with open(_cand) as _f:
+            exec(compile(_f.read(), _cand, "exec"),
+                 {"__file__": _cand, "__name__": "sitecustomize"})
+        break
+except Exception:  # pragma: no cover
+    pass

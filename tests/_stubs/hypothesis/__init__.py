@@ -1,0 +1,78 @@
+"""Minimal hypothesis stand-in (the container has no ``hypothesis`` wheel).
+
+Activated by tests/conftest.py ONLY when the real package is missing, so an
+environment with hypothesis installed uses the real engine. Implements the
+subset this suite uses: ``@given(**kwargs)`` with keyword strategies,
+``@settings(max_examples=, deadline=)``, and the ``integers`` / ``floats`` /
+``sampled_from`` / ``booleans`` strategies. Each test runs ``max_examples``
+deterministic draws (seeded from the test name); the first draws hit the
+strategy boundaries, the rest are uniform — no shrinking.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+from . import strategies  # noqa: F401
+from .strategies import SearchStrategy
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+
+class HealthCheck:  # accepted and ignored (API compatibility)
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def settings(**kwargs):
+    """Records max_examples on the function; other knobs are ignored."""
+
+    def deco(fn):
+        fn._stub_settings = dict(getattr(fn, "_stub_settings", {}), **kwargs)
+        return fn
+
+    return deco
+
+
+def given(*args, **strategies_kw):
+    if args:
+        raise TypeError("stub hypothesis supports keyword strategies only")
+    for name, s in strategies_kw.items():
+        if not isinstance(s, SearchStrategy):
+            raise TypeError(f"{name} is not a strategy: {s!r}")
+
+    def deco(fn):
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper(*outer_args, **outer_kw):
+            # read at call time: @settings below @given marks fn, @settings
+            # above @given marks this wrapper
+            merged = dict(getattr(fn, "_stub_settings", {}),
+                          **getattr(wrapper, "_stub_settings", {}))
+            n_examples = int(merged.get("max_examples", 20))
+            rng = np.random.default_rng(seed)
+            for i in range(n_examples):
+                drawn = {k: s.example(i, rng)
+                         for k, s in strategies_kw.items()}
+                try:
+                    fn(*outer_args, **dict(outer_kw, **drawn))
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (draw {i}): {drawn}") from e
+
+        # hide the strategy kwargs from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values()
+                  if p.name not in strategies_kw]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__  # keep pytest off the original signature
+        # pytest plugins (e.g. anyio) probe fn.hypothesis.inner_test
+        wrapper.hypothesis = type("_Hyp", (), {"inner_test": fn})()
+        return wrapper
+
+    return deco

@@ -1,0 +1,65 @@
+"""Strategy objects for the stub hypothesis: boundary-first, then uniform."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+
+class SearchStrategy:
+    def example(self, i: int, rng):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, i, rng):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, i, rng):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+
+    def example(self, i, rng):
+        if i < len(self.elements):
+            return self.elements[i]
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class _Booleans(_SampledFrom):
+    def __init__(self):
+        super().__init__([False, True])
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()

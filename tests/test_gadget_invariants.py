@@ -1,0 +1,74 @@
+"""GADGET scheduler contract invariants (paper constraints (2)-(6)).
+
+Complements tests/test_scheduler.py with the resource-capacity and
+online-causality guarantees the paper's feasibility argument rests on, plus
+monotonicity of the offline-horizon utility (the objective is a monotone
+set function over per-slot allocations — Lemma 5's premise).
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.cluster import make_fat_tree
+from repro.cluster.topology import ResourceState
+from repro.cluster.trace import JobTraceConfig, generate_jobs
+from repro.core.gadget import GadgetScheduler, run_offline_horizon
+from repro.core.gvne import GvneConfig
+from repro.core.problem import DDLJSInstance, ScheduleState
+
+EPS = 1e-6
+
+
+@pytest.fixture(scope="module")
+def instance():
+    graph = make_fat_tree(n_servers=12, seed=7)
+    jobs = generate_jobs(JobTraceConfig(n_jobs=14, horizon=24, seed=11))
+    return DDLJSInstance(graph=graph, jobs=jobs, horizon=24)
+
+
+def _run_slots(instance):
+    """Drive Algorithm 1 slot by slot, yielding (t, res, decision)."""
+    state = ScheduleState(instance)
+    sched = GadgetScheduler(GvneConfig(seed=3))
+    for t in range(instance.horizon):
+        res = ResourceState(instance.graph)
+        decision = sched.schedule_slot(t, res, state)
+        yield t, res, decision
+        state.commit_slot(decision.embeddings)
+
+
+def test_committed_embeddings_respect_capacities(instance):
+    """(a) after every slot, no node resource or link bandwidth is negative —
+    committed demand never exceeds ResourceState capacities."""
+    saw_commit = False
+    for _, res, decision in _run_slots(instance):
+        saw_commit = saw_commit or bool(decision.embeddings)
+        for sid, free in res.free_node.items():
+            caps = res.graph.server_by_id[sid].caps
+            for r, v in free.items():
+                assert -EPS <= v <= caps[r] + EPS, (sid, r, v)
+        for e, v in res.free_edge.items():
+            assert -EPS <= v <= res.graph.links[e] + EPS, (e, v)
+    assert saw_commit, "trace produced no embeddings; invariants untested"
+
+
+def test_online_scheduler_never_embeds_future_arrivals(instance):
+    """(b) slot t only ever embeds jobs with a_i <= t (constraint (6))."""
+    for t, _, decision in _run_slots(instance):
+        for e in decision.embeddings:
+            assert instance.job(e.job_id).arrival <= t, (
+                t, e.job_id, instance.job(e.job_id).arrival)
+
+
+def test_offline_horizon_utility_monotone(instance):
+    """(c) total utility of run_offline_horizon is monotone in the horizon:
+    more slots can only add worker-time under nondecreasing utilities."""
+    utilities = []
+    for horizon in (4, 8, 16, 24):
+        inst = dataclasses.replace(instance, horizon=horizon)
+        state = run_offline_horizon(inst, GadgetScheduler(GvneConfig(seed=3)))
+        utilities.append(state.total_utility())
+    assert utilities[0] >= 0.0
+    for earlier, later in zip(utilities, utilities[1:]):
+        assert later >= earlier - EPS, utilities

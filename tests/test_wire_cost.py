@@ -1,0 +1,41 @@
+"""Wire-cost consistency: the executable ring (repro.dist) and the
+scheduler's analytical model (repro.core.rar_model) must price one
+all-reduce identically — 2d(w-1)/w elements per worker."""
+
+import pytest
+
+from repro.core.rar_model import rar_allreduce_time, rar_ring_bytes_per_worker
+from repro.dist.collectives import ring_wire_elements
+from repro.dist.compression import compressed_wire_bytes
+
+
+@pytest.mark.parametrize("d", [1, 1_000, 123_457, 7_000_000])
+@pytest.mark.parametrize("w", [1, 2, 3, 4, 8, 16, 50])
+def test_ring_wire_elements_matches_rar_model(d, w):
+    assert ring_wire_elements(d, w) == pytest.approx(
+        rar_ring_bytes_per_worker(d, w, elem_bytes=1))
+    # and in f32 bytes, the unit used by the simulator
+    assert ring_wire_elements(d, w) * 4 == pytest.approx(
+        rar_ring_bytes_per_worker(d, w, elem_bytes=4))
+
+
+@pytest.mark.parametrize("w", [2, 4, 8, 32])
+def test_wire_term_drives_allreduce_time(w):
+    """rar_allreduce_time's bandwidth term is exactly the one-directional
+    wire volume (half of 2d(w-1)/w) over b, plus the reduction term."""
+    d, b, g = 1e6, 1e9, 1e12
+    expected = (ring_wire_elements(d, w) / 2.0) * (2.0 / b) + d * (
+        w - 1.0) / w / g
+    assert rar_allreduce_time(w, d, b, g) == pytest.approx(expected, rel=1e-9)
+
+
+def test_single_worker_rings_are_free():
+    assert ring_wire_elements(5e6, 1) == 0.0
+    assert compressed_wire_bytes(5e6, 1) == 0.0
+    assert rar_allreduce_time(1, 5e6, 1e9, 1e12) == 0.0
+
+
+@pytest.mark.parametrize("d,w", [(10_000, 8), (1_000_000, 16), (4096, 4)])
+def test_int8_ring_close_to_4x_cheaper(d, w):
+    ratio = ring_wire_elements(d, w) * 4 / compressed_wire_bytes(d, w)
+    assert 3.5 < ratio < 4.0
