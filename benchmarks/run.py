@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   fig5  embedded ratio vs node (GPU) capacity
   fig6  embedded ratio vs edge (bandwidth) capacity
   fig7  G-VNE approximation ratio vs exact branch-and-bound (HiGHS)
+  fig8  contention sweep: utility + fair-share slowdown vs oversubscription
   eq1   RAR iteration-time model table (paper §III-3)
 
 Scale note: the paper uses S=50, T=200; the default here is a proportionally
@@ -23,7 +24,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.cluster import make_fat_tree
-from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.simulator import ClusterSimulator, ContentionConfig
 from repro.cluster.topology import ResourceState
 from repro.cluster.trace import JobTraceConfig, generate_jobs
 from repro.core.baselines import DrfScheduler, FifoScheduler, LasScheduler
@@ -170,6 +171,43 @@ def fig7_approx_ratio(full: bool = False) -> None:
          f"max={np.max(ratios):.3f};n={len(ratios)}")
 
 
+def fig8_contention_sweep(full: bool = False) -> None:
+    """Beyond-paper: GADGET under shared-bandwidth contention.
+
+    Sweeps the edge oversubscription factor on a bandwidth-scarce cluster
+    (links scaled down so rings actually collide on ToR->core edges) and
+    reports total utility, peak edge contention (reserved/capacity) and the
+    mean fair-share slowdown tau(b_i)/tau(b_eff)."""
+    n_servers = 50 if full else 16
+    horizon = 100 if full else 40
+    n_jobs = 60 if full else 30
+    for oversub in ([1.0, 1.25, 1.5, 2.0, 3.0] if full else [1.0, 1.5, 2.0]):
+        graph = make_fat_tree(n_servers=n_servers, seed=7)
+        for e in list(graph.links):
+            graph.links[e] *= 0.05  # scarce-bandwidth regime (cf. fig6)
+        jobs = generate_jobs(JobTraceConfig(
+            n_jobs=n_jobs, horizon=horizon,
+            mean_interarrival=horizon / (2.0 * n_jobs),
+            bandwidth_range=(1e9, 10e9),   # fat rings: force edge sharing
+            zeta_range=(20, 100),          # fig4b scarcity regime: utility
+            expected_iters_range=(3000, 30000),   # separates under slowdown
+            sensitivity_range=(0.0005, 0.005),
+            seed=8))
+        inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
+        sim = ClusterSimulator(
+            inst, contention=ContentionConfig(oversubscription=oversub))
+        t0 = time.perf_counter()
+        res = sim.run(GadgetScheduler(GvneConfig(seed=0)))
+        dt = (time.perf_counter() - t0) * 1e6 / horizon
+        peak = max((r.max_edge_contention for r in res.records), default=0.0)
+        mean_cf = float(np.mean([r.mean_contention_factor for r in res.records]))
+        emit(f"fig8/oversub_x{oversub}", dt,
+             f"total_utility={res.total_utility:.2f};"
+             f"embedded_ratio={res.embedded_ratio():.4f};"
+             f"peak_edge_contention={peak:.3f};"
+             f"mean_contention_factor={mean_cf:.4f}")
+
+
 def eq1_rar_time_model(full: bool = False) -> None:
     """§III-3 table: tau(w) for a 1.2B-param job on v5e constants."""
     prof = profile_from_arch(n_params=1.2e9, tokens_per_batch=4096 * 8)
@@ -186,6 +224,7 @@ FIGS = {
     "fig5": fig5_node_capacity,
     "fig6": fig6_edge_capacity,
     "fig7": fig7_approx_ratio,
+    "fig8": fig8_contention_sweep,
     "eq1": eq1_rar_time_model,
 }
 
@@ -195,12 +234,35 @@ def main() -> None:
     parser.add_argument("--only", nargs="*", choices=sorted(FIGS), default=None)
     parser.add_argument("--full", action="store_true",
                         help="paper-scale settings (slow)")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also dump the rows as a JSON artifact")
     args = parser.parse_args()
     print("name,us_per_call,derived")
     for name, fn in FIGS.items():
         if args.only and name not in args.only:
             continue
         fn(full=args.full)
+    if args.json:
+        import json
+
+        def _num(v: str):
+            try:
+                return float(v)
+            except ValueError:
+                return v
+
+        rows = []
+        for row in ROWS:
+            name, us, derived = row.split(",", 2)
+            rows.append({
+                "name": name,
+                "us_per_call": float(us),
+                **{k: _num(v) for k, v in
+                   (kv.split("=", 1) for kv in derived.split(";") if "=" in kv)},
+            })
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {len(rows)} rows -> {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -9,4 +9,15 @@ from repro.cluster.topology import (  # noqa: F401
     make_fat_tree,
 )
 from repro.cluster.trace import JobTraceConfig, generate_jobs  # noqa: F401
-from repro.cluster.simulator import ClusterSimulator, SimResult  # noqa: F401
+from repro.cluster.simulator import (  # noqa: F401
+    ClusterSimulator,
+    ContentionConfig,
+    FaultConfig,
+    SimResult,
+)
+from repro.cluster.calibrate import (  # noqa: F401
+    RingTimingSample,
+    calibrate_profile,
+    fit_comm_model,
+    load_timings,
+)

@@ -1,0 +1,216 @@
+"""Calibrate Eq. (1) bandwidth from measured ring-all-reduce timings.
+
+Closes the ROADMAP loop "feed measured test_dist ring timings back into
+RarJobProfile bandwidth estimates": the slow ring-collective tests (and the
+``python -m repro.cluster.calibrate`` CLI) time ``repro.dist.collectives.
+ring_all_reduce`` over real devices, and this module fits the Eq. (1)
+communication model to those samples:
+
+    t(w, d) = x * slope + overhead,   x = d (w-1)/w,   slope = 2/b + 1/G
+
+A linear least-squares over (x, t) yields ``slope`` and ``overhead``; given a
+reduction throughput G (or attributing everything to the wire with G -> inf)
+the calibrated per-hop bandwidth is ``b = 2 / (slope - 1/G)``. The bundled
+fixture ``tests/data/ring_timings.json`` holds timings recorded on 8 XLA host
+devices so calibration is testable without a multi-device run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.rar_model import RarJobProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class RingTimingSample:
+    """One measured all-reduce: ring size ``world``, per-worker gradient size
+    ``n_elements`` (the paper's d), wall-clock ``seconds`` per collective."""
+
+    world: int
+    n_elements: int
+    seconds: float
+
+    @property
+    def comm_load(self) -> float:
+        """x = d (w-1)/w — the Eq. (1) per-worker wire+reduce load."""
+        return self.n_elements * (self.world - 1.0) / max(self.world, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationResult:
+    bandwidth: float        # fitted b, elements/sec
+    overhead: float         # fitted per-collective latency gamma, seconds
+    slope: float            # 2/b + 1/G, sec per element of comm load
+    residual: float         # RMS fit residual, seconds
+    n_samples: int
+
+
+def fit_comm_model(
+    samples: Sequence[RingTimingSample],
+    reduce_speed: float = float("inf"),
+) -> CalibrationResult:
+    """Least-squares fit of t = x*slope + overhead over samples with w >= 2.
+
+    ``reduce_speed`` is the assumed G (elements/sec); the default inf
+    attributes the whole slope to the wire (a conservative bandwidth
+    estimate: the true b is at least as large).
+    """
+    usable = [s for s in samples if s.world >= 2 and s.seconds > 0]
+    if len(usable) < 2:
+        raise ValueError("fit_comm_model: need >= 2 samples with world >= 2")
+    x = np.array([s.comm_load for s in usable])
+    t = np.array([s.seconds for s in usable])
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    (slope, overhead), *_ = np.linalg.lstsq(A, t, rcond=None)
+    slope = float(slope)
+    overhead = float(max(overhead, 0.0))
+    if slope <= 0.0:
+        raise ValueError(
+            f"fit_comm_model: fitted slope {slope:.3e} s/elem is not "
+            f"positive — the timings show no dependence on the comm load "
+            f"(too noisy, or a single load level)"
+        )
+    inv_g = 1.0 / reduce_speed if np.isfinite(reduce_speed) else 0.0
+    wire = slope - inv_g
+    if wire <= 0.0:
+        raise ValueError(
+            f"fit_comm_model: fitted slope {slope:.3e} s/elem <= 1/G "
+            f"{inv_g:.3e} — the measured timings are inconsistent with the "
+            f"assumed reduction throughput G={reduce_speed:.3e}; pass a "
+            f"smaller reduce_speed (or the default inf) instead"
+        )
+    residual = float(np.sqrt(np.mean((A @ [slope, overhead] - t) ** 2)))
+    return CalibrationResult(
+        bandwidth=2.0 / wire,
+        overhead=overhead,
+        slope=slope,
+        residual=residual,
+        n_samples=len(usable),
+    )
+
+
+def calibrate_profile(
+    profile: RarJobProfile,
+    samples: Sequence[RingTimingSample],
+    *,
+    use_overhead: bool = False,
+) -> RarJobProfile:
+    """Replace ``profile.bandwidth`` with the value fitted from measurements.
+
+    The profile's own ``reduce_speed`` is held fixed so the fit only
+    re-attributes the wire term; ``use_overhead=True`` also adopts the fitted
+    per-iteration latency gamma.
+    """
+    fit = fit_comm_model(samples, reduce_speed=profile.reduce_speed)
+    updates = {"bandwidth": fit.bandwidth}
+    if use_overhead:
+        updates["overhead"] = fit.overhead
+    return dataclasses.replace(profile, **updates)
+
+
+def load_timings(path: str) -> List[RingTimingSample]:
+    """Read a JSON list of {world, n_elements, seconds} records."""
+    with open(path) as f:
+        raw = json.load(f)
+    return [
+        RingTimingSample(
+            world=int(r["world"]),
+            n_elements=int(r["n_elements"]),
+            seconds=float(r["seconds"]),
+        )
+        for r in raw
+    ]
+
+
+def dump_timings(samples: Iterable[RingTimingSample], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([dataclasses.asdict(s) for s in samples], f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Measurement (requires a live multi-device jax runtime)
+# ---------------------------------------------------------------------------
+
+def measure_ring_timings(
+    worlds: Sequence[int] = (2, 4, 8),
+    n_elements: Sequence[int] = (1 << 14, 1 << 16, 1 << 18),
+    repeats: int = 5,
+) -> List[RingTimingSample]:
+    """Time ``ring_all_reduce`` on the current jax devices.
+
+    Must run in a process with >= max(worlds) devices (e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` like
+    tests/test_dist.py). Returns the best-of-``repeats`` wall time per
+    (world, size) to suppress scheduling noise.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.dist.collectives import ring_all_reduce
+
+    out: List[RingTimingSample] = []
+    devices = jax.devices()
+    for w in worlds:
+        if w < 2 or w > len(devices):
+            continue
+        mesh = Mesh(np.array(devices[:w]), ("d",))
+        for d in n_elements:
+            f = jax.jit(
+                jax.shard_map(
+                    lambda a: ring_all_reduce(a, "d"),
+                    mesh=mesh,
+                    in_specs=P("d", None),
+                    out_specs=P("d", None),
+                )
+            )
+            x = jnp.ones((w, d), jnp.float32)
+            f(x).block_until_ready()  # compile + warm up
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                f(x).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            out.append(RingTimingSample(world=w, n_elements=d, seconds=best))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    """Record ring timings to JSON: spawns itself with 8 host devices."""
+    import argparse
+    import os
+    import subprocess
+    import sys
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="ring_timings.json")
+    parser.add_argument("--repeats", type=int, default=5)
+    parser.add_argument("--_measure", action="store_true",
+                        help="internal: run the measurement in-process")
+    args = parser.parse_args(argv)
+
+    if args._measure:
+        samples = measure_ring_timings(repeats=args.repeats)
+        dump_timings(samples, args.out)
+        fit = fit_comm_model(samples)
+        print(f"recorded {len(samples)} samples -> {args.out}; "
+              f"fitted b={fit.bandwidth:.3e} elems/s, "
+              f"gamma={fit.overhead * 1e6:.1f} us, rms={fit.residual:.2e}s")
+        return
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    cmd = [sys.executable, "-m", "repro.cluster.calibrate", "--_measure",
+           "--out", args.out, "--repeats", str(args.repeats)]
+    raise SystemExit(subprocess.run(cmd, env=env).returncode)
+
+
+if __name__ == "__main__":
+    main()

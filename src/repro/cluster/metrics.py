@@ -24,6 +24,18 @@ def summarize(results: Sequence[SimResult]) -> List[Dict[str, float]]:
                 "worker_time_total": round(
                     float(sum(rec.effective_worker_time for rec in r.records)), 1
                 ),
+                # contention accounting (reserved/capacity > 1 ⇒ fair-sharing)
+                "peak_edge_contention": round(
+                    float(max((rec.max_edge_contention for rec in r.records),
+                              default=0.0)), 4
+                ),
+                "mean_contention_factor": round(
+                    float(np.mean([rec.mean_contention_factor
+                                   for rec in r.records])), 4
+                ),
+                "slots_lost_to_failures": int(
+                    sum(rec.lost_embeddings for rec in r.records)
+                ),
             }
         )
     return rows

@@ -150,31 +150,85 @@ class Embedding:
 
 
 class ResourceState:
-    """Free multi-resource node capacities + free link bandwidth at one slot."""
+    """Free multi-resource node capacities + free link bandwidth at one slot.
 
-    def __init__(self, graph: SubstrateGraph):
+    ``oversubscription`` > 1 switches edge admission from hard reservation to
+    a contended regime: an edge accepts reservations up to
+    ``oversubscription * capacity``, and every ring crossing an oversubscribed
+    edge sees only its fair share of the physical capacity (cf. Yu et al.,
+    arXiv:2207.07817; Wang et al., arXiv:2002.10105). The default of 1.0
+    reproduces the paper's isolated-ring pricing exactly.
+    """
+
+    def __init__(self, graph: SubstrateGraph, oversubscription: float = 1.0):
         self.graph = graph
+        self.oversubscription = max(1.0, float(oversubscription))
         self.free_node: Dict[int, Dict[str, float]] = {
             s.id: dict(s.caps) for s in graph.servers
         }
+        # residual = capacity - sum of reservations; may go *negative* when
+        # oversubscription > 1 (reservations may exceed physical capacity).
         self.free_edge: Dict[Edge, float] = dict(graph.links)
         self.committed: Dict[int, Embedding] = {}
 
     # -- queries ------------------------------------------------------------
-    def max_workers_on_server(self, server: int, demands: Dict[str, float]) -> int:
+    def max_workers_on_server(
+        self, server: int, demands: Dict[str, float], cap: Optional[int] = None
+    ) -> int:
+        """Workers of per-worker demand ``demands`` fitting in free capacity.
+
+        ``cap`` (the job's N_i) bounds the answer; it is *required* when no
+        demand entry is positive, since free capacity then imposes no limit.
+        """
+        if not demands:
+            raise ValueError("max_workers_on_server: empty demand vector")
         free = self.free_node[server]
         lim = float("inf")
         for r, l in demands.items():
             if l > 0:
                 lim = min(lim, free.get(r, 0.0) / l)
-        return int(np.floor(lim + 1e-9)) if lim != float("inf") else 10**9
+        if lim == float("inf"):
+            if cap is None:
+                raise ValueError(
+                    "max_workers_on_server: no positive demand and no cap — "
+                    "placement would be unbounded"
+                )
+            return max(0, int(cap))
+        n = int(np.floor(lim + 1e-9))
+        return min(n, max(0, int(cap))) if cap is not None else n
+
+    def _edge_slack(self, e: Edge) -> float:
+        """Extra admissible reservation beyond residual under oversubscription."""
+        return (self.oversubscription - 1.0) * self.graph.links.get(e, 0.0)
+
+    def admissible_edge_capacity(self, e: Edge) -> float:
+        """Reservation an edge can still accept: residual plus the
+        oversubscription allowance, floored at zero. The single admission
+        bound shared by feasibility, path selection, and the G-VNE LP."""
+        return max(0.0, self.free_edge.get(e, 0.0) + self._edge_slack(e))
+
+    def reserved_edge(self, e: Edge) -> float:
+        """Total bandwidth currently reserved on edge e."""
+        cap = self.graph.links.get(e, 0.0)
+        return cap - self.free_edge.get(e, cap)
 
     def best_path(self, s: int, s2: int, bandwidth: float) -> Optional[Tuple[NodeId, ...]]:
-        """Max-bottleneck path in P_ss' with residual >= bandwidth, else None."""
-        best, best_bn = None, -1.0
+        """Max-bottleneck admissible path in P_ss', else None.
+
+        Paths are scored by bottleneck residual, so among admissible paths the
+        *least contended* one wins; under oversubscription a path whose
+        residual is below ``bandwidth`` is still admissible as long as every
+        edge stays within ``oversubscription * capacity``.
+        """
+        best, best_bn = None, -float("inf")
         for p in self.graph.paths(s, s2):
-            bn = min(self.free_edge[e] for e in SubstrateGraph.path_edges(p))
-            if bn >= bandwidth and bn > best_bn:
+            edges = SubstrateGraph.path_edges(p)
+            bn = min(self.free_edge[e] for e in edges)
+            admissible = all(
+                bandwidth <= self.admissible_edge_capacity(e) + 1e-9
+                for e in edges
+            )
+            if admissible and bn > best_bn:
                 best, best_bn = p, bn
         return best
 
@@ -185,9 +239,48 @@ class ResourceState:
                 if v > self.free_node[s].get(r, 0.0) + 1e-9:
                     return False
         for e, v in emb.edge_demand().items():
-            if v > self.free_edge.get(e, 0.0) + 1e-9:
+            if v > self.admissible_edge_capacity(e) + 1e-9:
                 return False
         return True
+
+    # -- contention (fair-share effective bandwidth) ------------------------
+    def effective_bandwidth(self, emb: Embedding, include_self: bool = False) -> float:
+        """Effective per-hop bandwidth of ``emb`` under fair-share contention.
+
+        For each edge the ring reserves, its share of the physical capacity is
+        ``reservation * capacity / total_reserved`` whenever the edge is
+        oversubscribed (total reserved > capacity); the ring's per-hop
+        bandwidth is the bottleneck share over all its edges. With no
+        oversubscribed edge this equals the reserved b_i (the paper's Eq. (1)
+        pricing). ``include_self=True`` adds the embedding's own demand first
+        (pre-commit prediction for candidate pricing).
+        """
+        if not emb.paths:
+            return emb.bandwidth
+        b_eff = emb.bandwidth
+        for e, v in emb.edge_demand().items():
+            cap = self.graph.links.get(e, 0.0)
+            reserved = self.reserved_edge(e) + (v if include_self else 0.0)
+            if cap <= 0.0:
+                return 0.0
+            if reserved > cap:
+                b_eff = min(b_eff, emb.bandwidth * cap / reserved)
+        return b_eff
+
+    def edge_contention(self) -> Dict[Edge, float]:
+        """reserved/capacity per edge with a nonzero reservation."""
+        out: Dict[Edge, float] = {}
+        for e, cap in self.graph.links.items():
+            reserved = self.reserved_edge(e)
+            if reserved > 1e-12 and cap > 0:
+                out[e] = reserved / cap
+        return out
+
+    def max_edge_contention(self) -> float:
+        """Max reserved/capacity over edges (0.0 when nothing is reserved;
+        values > 1.0 mean at least one edge is oversubscribed)."""
+        cont = self.edge_contention()
+        return max(cont.values()) if cont else 0.0
 
     # -- mutation -----------------------------------------------------------
     def commit(self, emb: Embedding, demands: Dict[str, float]) -> None:
@@ -211,16 +304,27 @@ class ResourceState:
     def clone(self) -> "ResourceState":
         out = ResourceState.__new__(ResourceState)
         out.graph = self.graph
+        out.oversubscription = self.oversubscription
         out.free_node = {s: dict(v) for s, v in self.free_node.items()}
         out.free_edge = dict(self.free_edge)
         out.committed = dict(self.committed)
         return out
 
-    def utilization(self) -> Dict[str, float]:
-        total = self.graph.total_caps()
+    def utilization(self, exclude: Optional[Iterable[int]] = None) -> Dict[str, float]:
+        """Fraction of capacity in use, per resource type.
+
+        ``exclude`` removes servers (e.g. failed ones) from both the used and
+        total sides, so downed capacity never counts as *in use*; with every
+        server excluded the utilization is defined as 0.0.
+        """
+        excl = set(exclude or ())
+        total = {r: 0.0 for r in self.graph.resource_types}
         free = {r: 0.0 for r in total}
         for s in self.graph.servers:
+            if s.id in excl:
+                continue
             for r in total:
+                total[r] += s.caps.get(r, 0.0)
                 free[r] += self.free_node[s.id].get(r, 0.0)
         return {r: 1.0 - free[r] / total[r] if total[r] else 0.0 for r in total}
 

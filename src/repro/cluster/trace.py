@@ -51,7 +51,10 @@ def generate_jobs(cfg: JobTraceConfig) -> List[Job]:
         gap = rng.exponential(cfg.mean_interarrival / max(diurnal, 0.2))
         t += gap
         if t >= cfg.horizon:
-            t = float(rng.integers(0, cfg.horizon))  # wrap leftover arrivals
+            # clamp overflow to the last slot: resampling uniformly here would
+            # break the monotone inter-arrival process and scatter late
+            # arrivals across the horizon
+            t = float(cfg.horizon - 1)
         arrivals.append(int(t))
         if rng.random() < cfg.burst_prob:
             for _ in range(cfg.burst_size):

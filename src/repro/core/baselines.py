@@ -32,7 +32,8 @@ def greedy_cycle_place(
     if workers <= 0:
         return None
     caps = {
-        s.id: res.max_workers_on_server(s.id, job.demands) for s in res.graph.servers
+        s.id: res.max_workers_on_server(s.id, job.demands, cap=job.max_workers)
+        for s in res.graph.servers
     }
     # colocate if possible
     best = max(caps, key=lambda s: caps[s])

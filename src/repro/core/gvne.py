@@ -81,15 +81,15 @@ def worker_upper_bound(res: ResourceState, job: Job, remaining: float) -> int:
     min( N_i,                               # per-slot cap (2)
          remaining worker-time budget,      # (11)
          total fractionally-packable workers across free capacity (4) ).
+
+    Per-server packability goes through ``max_workers_on_server`` with the
+    job's N_i as cap, so a demand vector with no positive entry is bounded by
+    N_i (or rejected on an empty vector) instead of being unbounded.
     """
     packable = 0.0
     for s in res.graph.servers:
-        free = res.free_node[s.id]
-        lim = float("inf")
-        for r, l in job.demands.items():
-            if l > 0:
-                lim = min(lim, free.get(r, 0.0) / l)
-        packable += max(0.0, lim if lim != float("inf") else 0.0)
+        packable += res.max_workers_on_server(s.id, job.demands,
+                                              cap=job.max_workers)
     return int(max(0, math.floor(min(job.max_workers, remaining, packable) + 1e-9)))
 
 
@@ -155,7 +155,8 @@ def generate_candidates(
     out: List[Candidate] = []
     seen = set()
     caps = {
-        s.id: res.max_workers_on_server(s.id, job.demands) for s in res.graph.servers
+        s.id: res.max_workers_on_server(s.id, job.demands, cap=job.max_workers)
+        for s in res.graph.servers
     }
     eligible = [s for s, c in caps.items() if c >= 1]
     if not eligible:
@@ -168,6 +169,11 @@ def generate_candidates(
         if key in seen:
             return
         seen.add(key)
+        # candidate utilities stay undiscounted: contention is priced at
+        # decision time, where the slot's commit set is visible — _backfill
+        # scores each job's options by fair-share-discounted utility and
+        # _reroute_contended re-places rings that landed on oversubscribed
+        # edges (a static discount here would double-count the self-term)
         out.append(
             Candidate(
                 job_id=job.id,
@@ -220,7 +226,8 @@ def enumerate_all_candidates(
     """
     out: List[Candidate] = []
     seen = set()
-    caps = {s.id: res.max_workers_on_server(s.id, job.demands) for s in res.graph.servers}
+    caps = {s.id: res.max_workers_on_server(s.id, job.demands, cap=job.max_workers)
+            for s in res.graph.servers}
     eligible = [s for s, c in caps.items() if c >= 1]
 
     def _push(emb: Optional[Embedding]) -> None:
@@ -287,7 +294,7 @@ def _build_lp(
     for (s, r), row in node_row.items():
         b[row] = res.free_node[s].get(r, 0.0)
     for e, row in edge_row.items():
-        b[row] = res.free_edge.get(e, 0.0)
+        b[row] = res.admissible_edge_capacity(e)
     for col, c in enumerate(cands):
         A[job_row[c.job_id], col] = 1.0
         for k, v in c.node_demand.items():
@@ -399,6 +406,16 @@ def _eval_choice(
     return value, node_use, edge_use
 
 
+def _predicted_slowdown(res: ResourceState, emb: Embedding,
+                        include_self: bool = True) -> float:
+    """Fair-share discount of an embedding against the current state: the
+    ratio b_eff/b_i in (0, 1], 1.0 when no edge it uses is oversubscribed."""
+    if not emb.paths or emb.bandwidth <= 0:
+        return 1.0
+    return min(1.0, res.effective_bandwidth(emb, include_self=include_self)
+               / emb.bandwidth)
+
+
 def _repair(
     chosen: List[Candidate], scratch: ResourceState, job_map: Dict[int, Job]
 ) -> List[Candidate]:
@@ -409,6 +426,46 @@ def _repair(
         demands = job_map[c.job_id].demands
         if scratch.feasible(c.embedding, demands):
             scratch.commit(c.embedding, demands)
+            out.append(c)
+    return out
+
+
+def _reroute_contended(
+    kept: List[Candidate],
+    scratch: ResourceState,
+    job_map: Dict[int, Job],
+) -> List[Candidate]:
+    """Contention-aware re-route: sequential repricing against this slot.
+
+    The selection LP's capacity rows cannot express fair-sharing, so two rings
+    rounded onto the same oversubscribed edge are only visible *after* commit.
+    For each kept ring whose committed fair share is below its reservation,
+    release it and try a fresh placement against the current scratch state
+    (``best_path`` prefers the least-contended admissible path; colocation has
+    no paths at all); keep whichever placement predicts the higher share.
+    """
+    out: List[Candidate] = []
+    for c in kept:
+        job = job_map[c.job_id]
+        slow = _predicted_slowdown(scratch, c.embedding, include_self=False)
+        if slow >= 1.0 - 1e-9:
+            out.append(c)
+            continue
+        scratch.release(c.job_id, job.demands)
+        alt = _first_fit_ring(scratch, job, c.kappa)
+        if alt is not None and \
+                _predicted_slowdown(scratch, alt) > slow + 1e-9:
+            scratch.commit(alt, job.demands)
+            out.append(dataclasses.replace(
+                c,
+                embedding=alt,
+                node_demand={(s, r): v for s, dd in
+                             alt.node_demand(job.demands).items()
+                             for r, v in dd.items()},
+                edge_demand=alt.edge_demand(),
+            ))
+        else:
+            scratch.commit(c.embedding, job.demands)
             out.append(c)
     return out
 
@@ -430,14 +487,24 @@ def _backfill(
     pool = [c for c in all_cands if c.job_id not in placed]
     pool.sort(key=lambda c: -c.utility)
     out = list(kept)
+    by_jid: Dict[int, List[Candidate]] = {}
     for c in pool:
-        if c.job_id in placed:
-            continue
-        demands = job_map[c.job_id].demands
-        if scratch.feasible(c.embedding, demands):
-            scratch.commit(c.embedding, demands)
-            out.append(c)
-            placed.add(c.job_id)
+        by_jid.setdefault(c.job_id, []).append(c)
+    # per job, among feasible candidates take the one with the best utility
+    # *after* the fair-share discount against what this slot already committed
+    for jid in sorted(by_jid, key=lambda j: -by_jid[j][0].utility):
+        demands = job_map[jid].demands
+        best_c, best_score = None, 0.0
+        for c in by_jid[jid]:
+            if not scratch.feasible(c.embedding, demands):
+                continue
+            score = c.utility * _predicted_slowdown(scratch, c.embedding)
+            if score > best_score:
+                best_c, best_score = c, score
+        if best_c is not None:
+            scratch.commit(best_c.embedding, demands)
+            out.append(best_c)
+            placed.add(jid)
     # column generation for jobs whose pre-generated candidates all collide
     best_kappa: Dict[int, int] = {}
     for c in pool:
@@ -469,7 +536,7 @@ def _backfill(
 
 def _first_fit_ring(res: ResourceState, job: Job, kappa: int) -> Optional[Embedding]:
     """Greedy ring placement against current residual capacity."""
-    caps = {s.id: res.max_workers_on_server(s.id, job.demands)
+    caps = {s.id: res.max_workers_on_server(s.id, job.demands, cap=job.max_workers)
             for s in res.graph.servers}
     # colocate on the freest server that fits
     fits = [s for s, c in caps.items() if c >= kappa]
@@ -552,7 +619,7 @@ def solve_slot(
                 break
         if ok:
             for e, v in edge_use.items():
-                if v > gamma_slack * res.free_edge.get(e, 0.0) + 1e-9:
+                if v > gamma_slack * res.admissible_edge_capacity(e) + 1e-9:
                     ok = False
                     break
         if ok:
@@ -564,6 +631,10 @@ def solve_slot(
     scratch = res.clone()
     kept = _repair(best_choice, scratch, job_map)
     kept = _backfill(kept, cands, scratch, job_map, state)
+    if res.oversubscription > 1.0:
+        # the LP cannot price fair-sharing; re-route rings that landed on
+        # oversubscribed edges now that the slot's full commit set is known
+        kept = _reroute_contended(kept, scratch, job_map)
     embeddings = [c.embedding for c in kept]
     final_value = sum(
         state.marginal_utility(job_map[e.job_id], e.n_workers) for e in embeddings

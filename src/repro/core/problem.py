@@ -81,9 +81,24 @@ class ScheduleState:
             if t >= j.arrival and self.remaining(j) > 1e-9
         ]
 
-    def commit_slot(self, embeddings: List[Embedding]) -> None:
-        for e in embeddings:
-            self.z[e.job_id] += e.n_workers
+    def commit_slot(
+        self,
+        embeddings: List[Embedding],
+        factors: Optional[List[float]] = None,
+    ) -> None:
+        """Accumulate one slot's allocations into z and the history.
+
+        ``factors`` scales each embedding's worker-time credit (straggler or
+        contention slowdown: z += factor * n_workers); omitted means full
+        credit. This is the single accounting path shared by
+        ``run_offline_horizon`` and the cluster simulator.
+        """
+        if factors is None:
+            factors = [1.0] * len(embeddings)
+        if len(factors) != len(embeddings):
+            raise ValueError("commit_slot: one factor per embedding required")
+        for e, f in zip(embeddings, factors):
+            self.z[e.job_id] += f * e.n_workers
             self.history[e.job_id].append(e)
 
     def job_utility(self, job: Job) -> float:

@@ -129,6 +129,47 @@ def rar_iteration_time_asymptote(
     )
 
 
+def effective_iteration_time(profile: "RarJobProfile", effective_bw: float,
+                             w: Array) -> Array:
+    """Eq. (1) re-priced with a *contended* per-hop bandwidth.
+
+    ``effective_bw`` is the fair-share bottleneck bandwidth the ring actually
+    sees this slot (elements/sec, same units as ``profile.bandwidth``) — e.g.
+    ``ResourceState.effective_bandwidth`` scaled into element units. All other
+    Eq. (1) terms are unchanged.
+    """
+    if effective_bw <= 0.0:
+        return float("inf")
+    return rar_iteration_time(
+        w,
+        d=profile.d,
+        bandwidth=effective_bw,
+        reduce_speed=profile.reduce_speed,
+        t_fwd_per_sample=profile.t_fwd_per_sample,
+        t_bwd=profile.t_bwd,
+        batch_size=profile.batch_size,
+        overhead=profile.overhead,
+    )
+
+
+def contention_progress_factor(profile: "RarJobProfile", w: int,
+                               effective_bw: float) -> float:
+    """Per-slot progress scale under contention: tau(b_i) / tau(b_eff) in (0, 1].
+
+    A synchronous ring whose links are fair-shared completes iterations at the
+    contended rate 1/tau(b_eff); relative to the isolated-ring pricing the
+    slot therefore delivers tau(b_i)/tau(b_eff) of the nominal progress.
+    Degenerate rings (w <= 1, no ring traffic) are unaffected.
+    """
+    if w <= 1 or effective_bw >= profile.bandwidth:
+        return 1.0
+    if effective_bw <= 0.0:
+        return 0.0
+    nominal = float(profile.iteration_time(w))
+    contended = float(effective_iteration_time(profile, effective_bw, w))
+    return nominal / contended if contended > 0 else 0.0
+
+
 def ps_worker_bytes(d: float, w: int, elem_bytes: int = 4) -> float:
     """PS-worker architecture per-iteration data exchange: 2wd (paper §III-2).
 

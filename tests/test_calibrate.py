@@ -1,0 +1,93 @@
+"""Bandwidth calibration from ring timings (repro.cluster.calibrate)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.cluster.calibrate import (
+    RingTimingSample,
+    calibrate_profile,
+    fit_comm_model,
+    load_timings,
+)
+from repro.core.rar_model import RarJobProfile
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "data", "ring_timings.json")
+
+B_TRUE = 1e8       # elements/sec
+G_TRUE = 5e8
+GAMMA_TRUE = 1e-3  # seconds
+
+
+def synthetic_samples():
+    out = []
+    for w in (2, 4, 8):
+        for d in (1e5, 1e6, 4e6):
+            x = d * (w - 1) / w
+            t = x * (2.0 / B_TRUE + 1.0 / G_TRUE) + GAMMA_TRUE
+            out.append(RingTimingSample(world=w, n_elements=int(d), seconds=t))
+    return out
+
+
+def test_fit_recovers_known_bandwidth():
+    fit = fit_comm_model(synthetic_samples(), reduce_speed=G_TRUE)
+    assert fit.bandwidth == pytest.approx(B_TRUE, rel=1e-6)
+    assert fit.overhead == pytest.approx(GAMMA_TRUE, rel=1e-6)
+    assert fit.residual < 1e-9
+
+
+def test_fit_without_reduce_speed_is_conservative():
+    # attributing the reduce term to the wire can only *lower* b
+    fit = fit_comm_model(synthetic_samples())
+    assert fit.bandwidth < B_TRUE
+    assert fit.bandwidth == pytest.approx(
+        2.0 / (2.0 / B_TRUE + 1.0 / G_TRUE), rel=1e-6)
+
+
+def test_fit_rejects_degenerate_input():
+    with pytest.raises(ValueError):
+        fit_comm_model([RingTimingSample(world=1, n_elements=10, seconds=1.0)])
+    # timings that *decrease* with comm load fit a negative slope: no wire
+    # signal, so the fit must refuse rather than emit a nonsense bandwidth
+    with pytest.raises(ValueError):
+        fit_comm_model([
+            RingTimingSample(world=2, n_elements=100, seconds=1.0),
+            RingTimingSample(world=2, n_elements=10000, seconds=0.5),
+        ])
+
+
+def test_fit_rejects_inconsistent_reduce_speed():
+    # assumed G so slow that 1/G exceeds the whole fitted slope: the fit
+    # must refuse rather than return an absurd near-infinite bandwidth
+    with pytest.raises(ValueError):
+        fit_comm_model(synthetic_samples(), reduce_speed=1e7)
+
+
+def test_calibrate_profile_replaces_bandwidth():
+    prof = RarJobProfile(d=1e6, bandwidth=1.0, reduce_speed=G_TRUE,
+                         t_fwd_per_sample=1e-5, t_bwd=1e-3, batch_size=32.0)
+    cal = calibrate_profile(prof, synthetic_samples())
+    assert cal.bandwidth == pytest.approx(B_TRUE, rel=1e-6)
+    assert cal.overhead == prof.overhead  # untouched by default
+    cal2 = calibrate_profile(prof, synthetic_samples(), use_overhead=True)
+    assert cal2.overhead == pytest.approx(GAMMA_TRUE, rel=1e-6)
+    # re-priced Eq. (1): calibrated bandwidth changes the iteration time
+    assert float(cal.iteration_time(4)) != float(prof.iteration_time(4))
+
+
+def test_recorded_fixture_calibrates():
+    """The bundled host-device timings yield a sane wire model."""
+    samples = load_timings(FIXTURE)
+    assert len(samples) >= 6 and all(s.seconds > 0 for s in samples)
+    fit = fit_comm_model(samples)
+    assert np.isfinite(fit.bandwidth) and fit.bandwidth > 0
+    # host-device rings move ~1e6..1e9 elements/sec — orders of magnitude,
+    # not exact (timings are hardware-dependent recordings)
+    assert 1e5 < fit.bandwidth < 1e12
+    prof = RarJobProfile(d=1e6, bandwidth=1e9, reduce_speed=1e9,
+                         t_fwd_per_sample=1e-5, t_bwd=1e-3, batch_size=32.0)
+    cal = calibrate_profile(prof, samples)
+    assert cal.bandwidth == pytest.approx(
+        fit_comm_model(samples, reduce_speed=prof.reduce_speed).bandwidth)

@@ -1,0 +1,339 @@
+"""Contention-aware pricing + simulator fault/utilization accounting.
+
+Invariants (ISSUE 2):
+  * two rings sharing one ToR->core edge each make less per-slot progress
+    than in isolation; non-overlapping rings are unaffected;
+  * GADGET total utility under contention <= the no-contention run;
+  * gpu_utilization is 0 on a slot where every server is failed;
+  * mid-slot failures void the slot's progress for rings touching them.
+"""
+
+import pytest
+
+from repro.cluster import make_fat_tree
+from repro.cluster.metrics import summarize
+from repro.cluster.simulator import ClusterSimulator, ContentionConfig, FaultConfig
+from repro.cluster.topology import (
+    Embedding,
+    Link,
+    ResourceState,
+    Server,
+    SubstrateGraph,
+)
+from repro.cluster.trace import JobTraceConfig, generate_jobs
+from repro.core.gadget import GadgetScheduler, SlotDecision
+from repro.core.gvne import GvneConfig, solve_slot
+from repro.core.problem import DDLJSInstance, Job, ScheduleState
+from repro.core.rar_model import (
+    RarJobProfile,
+    contention_progress_factor,
+    effective_iteration_time,
+)
+from repro.core.utility import sqrt_utility
+
+CORE_BW = 10.0
+UPLINK_BW = 100.0
+RING_BW = 6.0  # two rings on one core edge: 12 > 10 => contended
+
+
+def two_rack_graph() -> SubstrateGraph:
+    """4 servers, 2 racks, 1 core switch: cross-rack rings must share r<->c."""
+    servers = [Server(0, 0, {"gpus": 4.0}), Server(1, 0, {"gpus": 4.0}),
+               Server(2, 1, {"gpus": 4.0}), Server(3, 1, {"gpus": 4.0})]
+    links = []
+    for s in servers:
+        links.append(Link(s.node, f"r{s.rack}", UPLINK_BW))
+        links.append(Link(f"r{s.rack}", s.node, UPLINK_BW))
+    for r in (0, 1):
+        links.append(Link(f"r{r}", "c0", CORE_BW))
+        links.append(Link("c0", f"r{r}", CORE_BW))
+    return SubstrateGraph(servers, links, n_racks=2, n_core=1)
+
+
+def cross_rack_ring(res: ResourceState, job_id: int, a: int, b: int,
+                    bw: float = RING_BW) -> Embedding:
+    fwd = res.graph.paths(a, b)[0]
+    rev = res.graph.paths(b, a)[0]
+    return Embedding(job_id, [(a, 1), (b, 1)], [fwd, rev], bw)
+
+
+def make_job(jid: int, bw: float = RING_BW) -> Job:
+    return Job(id=jid, arrival=0, max_workers=2, demands={"gpus": 1.0},
+               budgets={"gpus": 100.0}, bandwidth=bw, zeta=1.0,
+               utility=sqrt_utility(1.0))
+
+
+class FixedScheduler:
+    """Commits a fixed plan of (embedding, demands) each slot (test double)."""
+
+    name = "fixed"
+
+    def __init__(self, plan):
+        self.plan = plan
+
+    def schedule_slot(self, t, res, state):
+        committed = []
+        for emb, demands in self.plan:
+            if res.feasible(emb, demands):
+                res.commit(emb, demands)
+                committed.append(emb)
+        return SlotDecision(t, committed, 0.0, 0.0, len(self.plan),
+                            len(committed))
+
+
+# ---------------------------------------------------------------------------
+# fair-share effective bandwidth (topology layer)
+# ---------------------------------------------------------------------------
+
+def test_isolated_ring_sees_reserved_bandwidth():
+    res = ResourceState(two_rack_graph(), oversubscription=2.0)
+    emb = cross_rack_ring(res, 0, 0, 2)
+    res.commit(emb, {"gpus": 1.0})
+    assert res.effective_bandwidth(emb) == pytest.approx(RING_BW)
+    assert res.max_edge_contention() == pytest.approx(RING_BW / CORE_BW)
+
+
+def test_two_rings_on_shared_edge_fair_share():
+    res = ResourceState(two_rack_graph(), oversubscription=2.0)
+    emb_a = cross_rack_ring(res, 0, 0, 2)
+    emb_b = cross_rack_ring(res, 1, 1, 3)
+    res.commit(emb_a, {"gpus": 1.0})
+    res.commit(emb_b, {"gpus": 1.0})
+    # each ring gets b * cap/reserved = 6 * 10/12 = 5 on the core bottleneck
+    expect = RING_BW * CORE_BW / (2 * RING_BW)
+    assert res.effective_bandwidth(emb_a) == pytest.approx(expect)
+    assert res.effective_bandwidth(emb_b) == pytest.approx(expect)
+    assert res.effective_bandwidth(emb_a) < RING_BW
+    assert res.max_edge_contention() == pytest.approx(2 * RING_BW / CORE_BW)
+
+
+def test_oversubscribed_commit_rejected_without_allowance():
+    res = ResourceState(two_rack_graph())  # oversubscription = 1.0
+    emb_a = cross_rack_ring(res, 0, 0, 2)
+    emb_b = cross_rack_ring(res, 1, 1, 3)
+    res.commit(emb_a, {"gpus": 1.0})
+    assert not res.feasible(emb_b, {"gpus": 1.0})
+    with pytest.raises(ValueError):
+        res.commit(emb_b, {"gpus": 1.0})
+
+
+def test_non_overlapping_rings_unaffected():
+    res = ResourceState(two_rack_graph(), oversubscription=2.0)
+    # same-rack rings: s0-s1 via r0 only, s2-s3 via r1 only
+    emb_a = Embedding(0, [(0, 1), (1, 1)],
+                      [res.graph.paths(0, 1)[0], res.graph.paths(1, 0)[0]],
+                      RING_BW)
+    emb_b = Embedding(1, [(2, 1), (3, 1)],
+                      [res.graph.paths(2, 3)[0], res.graph.paths(3, 2)[0]],
+                      RING_BW)
+    res.commit(emb_a, {"gpus": 1.0})
+    res.commit(emb_b, {"gpus": 1.0})
+    assert res.effective_bandwidth(emb_a) == pytest.approx(RING_BW)
+    assert res.effective_bandwidth(emb_b) == pytest.approx(RING_BW)
+
+
+def test_best_path_prefers_less_contended_core():
+    graph = make_fat_tree(n_servers=6, n_racks=2, n_core=2, seed=0)
+    res = ResourceState(graph, oversubscription=2.0)
+    cross = [(a.id, b.id) for a in graph.servers for b in graph.servers
+             if a.rack != b.rack]
+    s, s2 = cross[0]
+    p1 = res.best_path(s, s2, 1.0)
+    # saturate p1's core edges: the next choice must route around them
+    for e in SubstrateGraph.path_edges(p1):
+        if e[0].startswith(("r", "c")) and e[1].startswith(("r", "c")):
+            res.free_edge[e] -= graph.links[e]
+    p2 = res.best_path(s, s2, 1.0)
+    assert p2 is not None and p2 != p1
+
+
+def test_solve_slot_avoids_decision_time_contention():
+    """G-VNE sees contention when it decides: with two cores available (each
+    fitting one ring) the slot's rings must not end up fair-sharing one core
+    edge — the backfill discount + re-route pass steer them apart."""
+    servers = [Server(i, 0 if i < 2 else 1, {"gpus": 1.0}) for i in range(4)]
+    links = []
+    for s in servers:
+        links.append(Link(s.node, f"r{s.rack}", 100 * RING_BW))
+        links.append(Link(f"r{s.rack}", s.node, 100 * RING_BW))
+    for r in (0, 1):
+        for c in (0, 1):  # each core edge fits exactly one ring's reservation
+            links.append(Link(f"r{r}", f"c{c}", 1.5 * RING_BW))
+            links.append(Link(f"c{c}", f"r{r}", 1.5 * RING_BW))
+    graph = SubstrateGraph(servers, links, n_racks=2, n_core=2)
+
+    jobs = [make_job(0), make_job(1)]
+    inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=1)
+    state = ScheduleState(inst)
+    res = ResourceState(graph, oversubscription=1.5)
+    result = solve_slot(res, jobs, state, GvneConfig(seed=0))
+    for e in result.embeddings:
+        res.commit(e, inst.job(e.job_id).demands)
+    # both jobs fully placed (1-GPU servers force multi-server rings)...
+    assert sum(e.n_workers for e in result.embeddings) == 4
+    # ...and no edge ends up oversubscribed: every ring keeps its full b_i
+    assert res.max_edge_contention() <= 1.0 + 1e-9
+    for e in result.embeddings:
+        assert res.effective_bandwidth(e) == pytest.approx(e.bandwidth)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) re-pricing (rar_model layer)
+# ---------------------------------------------------------------------------
+
+PROFILE = RarJobProfile(d=1e6, bandwidth=1e8, reduce_speed=5e8,
+                        t_fwd_per_sample=1e-5, t_bwd=1e-3, batch_size=32.0)
+
+
+def test_effective_iteration_time_monotone_in_bandwidth():
+    t_full = float(PROFILE.iteration_time(4))
+    t_half = float(effective_iteration_time(PROFILE, PROFILE.bandwidth / 2, 4))
+    t_tenth = float(effective_iteration_time(PROFILE, PROFILE.bandwidth / 10, 4))
+    assert float(effective_iteration_time(PROFILE, PROFILE.bandwidth, 4)) \
+        == pytest.approx(t_full)
+    assert t_full < t_half < t_tenth
+
+
+def test_contention_progress_factor_bounds():
+    assert contention_progress_factor(PROFILE, 4, PROFILE.bandwidth) == 1.0
+    assert contention_progress_factor(PROFILE, 1, 1.0) == 1.0  # no ring traffic
+    f = contention_progress_factor(PROFILE, 4, PROFILE.bandwidth / 3)
+    assert 0.0 < f < 1.0
+    # compute terms damp the slowdown: factor > pure-bandwidth ratio
+    assert f > 1.0 / 3.0
+    assert contention_progress_factor(PROFILE, 4, 0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# simulator end-to-end
+# ---------------------------------------------------------------------------
+
+def _sim_two_rings(shared: bool, oversub: float = 2.0):
+    graph = two_rack_graph()
+    jobs = [make_job(0), make_job(1)]
+    inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=1)
+    res_probe = ResourceState(graph)
+    if shared:
+        plan = [(cross_rack_ring(res_probe, 0, 0, 2), jobs[0].demands),
+                (cross_rack_ring(res_probe, 1, 1, 3), jobs[1].demands)]
+    else:
+        g = res_probe.graph
+        plan = [
+            (Embedding(0, [(0, 1), (1, 1)],
+                       [g.paths(0, 1)[0], g.paths(1, 0)[0]], RING_BW),
+             jobs[0].demands),
+            (Embedding(1, [(2, 1), (3, 1)],
+                       [g.paths(2, 3)[0], g.paths(3, 2)[0]], RING_BW),
+             jobs[1].demands),
+        ]
+    sim = ClusterSimulator(
+        inst, contention=ContentionConfig(oversubscription=oversub))
+    return sim.run(FixedScheduler(plan)), inst
+
+
+def _sim_single_ring():
+    graph = two_rack_graph()
+    jobs = [make_job(0), make_job(1)]
+    inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=1)
+    res_probe = ResourceState(graph)
+    plan = [(cross_rack_ring(res_probe, 0, 0, 2), jobs[0].demands)]
+    sim = ClusterSimulator(
+        inst, contention=ContentionConfig(oversubscription=2.0))
+    return sim.run(FixedScheduler(plan))
+
+
+def test_shared_edge_rings_progress_below_isolation():
+    contended, _ = _sim_two_rings(shared=True)
+    isolated = _sim_single_ring()
+    z_isolated = isolated.state.z[0]
+    assert z_isolated == pytest.approx(2.0)  # full credit for 2 workers
+    for jid in (0, 1):
+        assert contended.state.z[jid] < z_isolated  # strictly below isolation
+        assert contended.state.z[jid] == pytest.approx(
+            2.0 * CORE_BW / (2 * RING_BW))  # ratio b_eff/b = 10/12
+    rec = contended.records[0]
+    assert rec.max_edge_contention == pytest.approx(2 * RING_BW / CORE_BW)
+    assert rec.max_edge_contention > 1.0
+
+
+def test_non_overlapping_rings_full_progress():
+    result, _ = _sim_two_rings(shared=False)
+    for jid in (0, 1):
+        assert result.state.z[jid] == pytest.approx(2.0)
+    assert result.records[0].max_edge_contention <= 1.0
+    assert result.records[0].mean_contention_factor == pytest.approx(1.0)
+
+
+def test_metrics_summarize_exposes_contention():
+    contended, _ = _sim_two_rings(shared=True)
+    rows = summarize([contended])
+    assert rows[0]["peak_edge_contention"] == pytest.approx(
+        2 * RING_BW / CORE_BW, abs=1e-3)
+    assert rows[0]["mean_contention_factor"] < 1.0
+
+
+def test_gadget_utility_under_contention_at_most_uncontended():
+    graph = make_fat_tree(n_servers=10, seed=1)
+    for e in list(graph.links):
+        graph.links[e] *= 0.05  # bandwidth-scarce: rings collide
+    jobs = generate_jobs(JobTraceConfig(n_jobs=16, horizon=16, seed=2))
+    inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=16)
+    contended = ClusterSimulator(
+        inst, contention=ContentionConfig(oversubscription=1.5, enabled=True)
+    ).run(GadgetScheduler(GvneConfig(seed=0)))
+    uncontended = ClusterSimulator(
+        inst, contention=ContentionConfig(oversubscription=1.5, enabled=False)
+    ).run(GadgetScheduler(GvneConfig(seed=0)))
+    assert contended.total_utility <= uncontended.total_utility + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# fault accounting regressions
+# ---------------------------------------------------------------------------
+
+def _fault_instance():
+    graph = make_fat_tree(n_servers=6, seed=3)
+    jobs = generate_jobs(JobTraceConfig(n_jobs=8, horizon=4, seed=4))
+    for j in jobs:
+        j.arrival = 0
+    return DDLJSInstance(graph=graph, jobs=jobs, horizon=4)
+
+
+def test_gpu_utilization_zero_when_all_servers_failed():
+    inst = _fault_instance()
+    sim = ClusterSimulator(
+        inst, FaultConfig(server_fail_prob=1.0, repair_prob=0.0, seed=0))
+    result = sim.run(GadgetScheduler(GvneConfig(seed=0)))
+    n_servers = len(inst.graph.servers)
+    # t=0: failures strike mid-slot; from t=1 every server is down
+    for rec in result.records[1:]:
+        assert rec.failed_servers == n_servers
+        assert rec.gpu_utilization == 0.0
+
+
+def test_mid_slot_failure_wave_voids_progress():
+    inst = _fault_instance()
+    sim = ClusterSimulator(
+        inst, FaultConfig(server_fail_prob=1.0, repair_prob=0.0, seed=0))
+    result = sim.run(GadgetScheduler(GvneConfig(seed=0)))
+    first = result.records[0]
+    assert first.workers_placed > 0          # scheduling happened...
+    assert first.lost_embeddings == first.n_embedded  # ...every ring voided
+    assert first.effective_worker_time == 0.0
+    for j in inst.jobs:                      # no worker-time credited at all
+        assert result.state.z[j.id] == 0.0
+    # history still records the (voided) placements for the slot
+    assert sum(len(h) for h in result.state.history.values()) == first.n_embedded
+
+
+def test_commit_slot_factors_accounting():
+    graph = two_rack_graph()
+    jobs = [make_job(0)]
+    inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=1)
+    state = ScheduleState(inst)
+    emb = Embedding(0, [(0, 2)], [], RING_BW)
+    state.commit_slot([emb], [0.5])
+    assert state.z[0] == pytest.approx(1.0)  # 0.5 * 2 workers
+    assert state.history[0] == [emb]
+    with pytest.raises(ValueError):
+        state.commit_slot([emb], [0.5, 0.5])

@@ -173,3 +173,27 @@ def test_error_feedback_convergence():
         residual = corrected - q
         x = x - 0.05 * q
     assert float(jnp.abs(x - w).max()) < 1e-2
+
+
+@pytest.mark.slow
+def test_measured_ring_timings_calibrate_bandwidth():
+    """ROADMAP loop closure: time real ring_all_reduce runs and feed the fit
+    back into an Eq. (1) profile (repro.cluster.calibrate)."""
+    out = run_multidevice("""
+        from repro.cluster.calibrate import (
+            calibrate_profile, fit_comm_model, measure_ring_timings)
+        from repro.core.rar_model import profile_from_arch
+
+        samples = measure_ring_timings(worlds=(2, 4, 8),
+                                       n_elements=(1 << 12, 1 << 14, 1 << 16),
+                                       repeats=2)
+        assert len(samples) == 9, samples
+        fit = fit_comm_model(samples)
+        assert fit.bandwidth > 0 and fit.n_samples == 9
+        prof = profile_from_arch(n_params=1e6, tokens_per_batch=256)
+        cal = calibrate_profile(prof, samples)
+        assert cal.bandwidth > 0 and cal.bandwidth != prof.bandwidth
+        assert float(cal.iteration_time(8)) > 0.0
+        print(f"CALIB_OK b={fit.bandwidth:.3e}")
+    """)
+    assert "CALIB_OK" in out

@@ -93,6 +93,78 @@ def test_bandwidth_depletes_on_paths(graph):
     assert res.free_edge[(f"s{a.id}", p_fwd[1])] == pytest.approx(free_before - 1e9)
 
 
+def test_max_workers_on_server_guards(graph):
+    res = ResourceState(graph)
+    target = graph.servers[0]
+    with pytest.raises(ValueError):
+        res.max_workers_on_server(target.id, {})
+    # no positive demand: unbounded unless the job's N_i caps it
+    with pytest.raises(ValueError):
+        res.max_workers_on_server(target.id, {"gpus": 0.0})
+    assert res.max_workers_on_server(target.id, {"gpus": 0.0}, cap=5) == 5
+    # cap also bounds the normal positive-demand path
+    free = int(target.caps["gpus"])
+    assert res.max_workers_on_server(target.id, {"gpus": 1.0}, cap=1) == min(1, free)
+
+
+def test_worker_upper_bound_zero_demand_bounded_by_max_workers(graph):
+    from repro.core.gvne import worker_upper_bound
+    from repro.core.problem import Job
+    from repro.core.utility import sqrt_utility
+
+    job = Job(id=0, arrival=0, max_workers=3, demands={"gpus": 0.0},
+              budgets={}, bandwidth=1.0, zeta=1.0, utility=sqrt_utility(1.0))
+    res = ResourceState(graph)
+    assert worker_upper_bound(res, job, remaining=float("inf")) <= job.max_workers
+
+
+def test_oversubscribed_edges_admit_and_fair_share(graph):
+    demands = {"gpus": 1.0, "mem": 1.0}
+    cross = [(a.id, b.id) for a in graph.servers for b in graph.servers
+             if a.rack != b.rack
+             and a.caps["gpus"] >= 2 and b.caps["gpus"] >= 2]
+    assert cross, "fixture should have a cross-rack pair with >= 2 GPUs"
+    a, b = cross[0]
+    hard = ResourceState(graph)
+    p_fwd = hard.best_path(a, b, 1.0)
+    p_rev = hard.best_path(b, a, 1.0)
+    bottleneck = min(graph.links[e] for e in SubstrateGraph.path_edges(p_fwd))
+    big = bottleneck * 0.75  # two rings exceed capacity on the bottleneck
+    emb1 = Embedding(0, [(a, 1), (b, 1)], [p_fwd, p_rev], big)
+    emb2 = Embedding(1, [(a, 1), (b, 1)], [p_fwd, p_rev], big)
+    hard.commit(emb1, demands)
+    assert not hard.feasible(emb2, demands)  # reject-only at oversub=1.0
+
+    soft = ResourceState(graph, oversubscription=2.0)
+    soft.commit(emb1, demands)
+    assert soft.feasible(emb2, demands)
+    soft.commit(emb2, demands)
+    assert soft.max_edge_contention() == pytest.approx(1.5)
+    for emb in (emb1, emb2):
+        assert soft.effective_bandwidth(emb) == pytest.approx(big / 1.5)
+    # release restores the uncontended state
+    soft.release(1, demands)
+    assert soft.effective_bandwidth(emb1) == pytest.approx(big)
+
+
+def test_utilization_excludes_failed_servers(graph):
+    res = ResourceState(graph)
+    target = max(graph.servers, key=lambda s: s.caps["gpus"])
+    res.commit(Embedding(0, [(target.id, 2)], [], 0.1),
+               {"gpus": 1.0, "mem": 1.0})
+    down = [s.id for s in graph.servers if s.id != target.id]
+    for sid in down:  # simulate the simulator zeroing failed capacity
+        for r in res.free_node[sid]:
+            res.free_node[sid][r] = 0.0
+    # naive accounting counts downed capacity as in-use...
+    assert res.utilization()["gpus"] > 2.0 / graph.total_caps()["gpus"] + 1e-9
+    # ...healthy-only accounting sees exactly the committed 2 GPUs
+    healthy = res.utilization(exclude=down)
+    assert healthy["gpus"] == pytest.approx(2.0 / target.caps["gpus"])
+    # all servers excluded: utilization is defined as zero
+    assert res.utilization(exclude=[s.id for s in graph.servers])["gpus"] == 0.0
+
+
 @given(seed=st.integers(0, 10_000))
 @settings(max_examples=30, deadline=None)
 def test_fat_tree_generation_invariants(seed):

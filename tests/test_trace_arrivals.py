@@ -1,0 +1,40 @@
+"""Arrival-process sanity for generate_jobs (bursty-Poisson shape)."""
+
+import numpy as np
+
+from repro.cluster.trace import JobTraceConfig, generate_jobs
+
+
+def test_arrivals_within_horizon_and_sorted():
+    cfg = JobTraceConfig(n_jobs=100, horizon=200, mean_interarrival=2.0, seed=0)
+    arrivals = [j.arrival for j in generate_jobs(cfg)]
+    assert all(0 <= a < cfg.horizon for a in arrivals)
+    assert arrivals == sorted(arrivals)
+
+
+def test_overflow_clamps_to_last_slot_not_uniform():
+    """Regression: overruns used to be resampled uniformly over the horizon,
+    breaking the monotone inter-arrival process; they must clamp instead."""
+    cfg = JobTraceConfig(n_jobs=200, horizon=50, mean_interarrival=2.0,
+                         burst_prob=0.0, seed=1)
+    arrivals = np.array([j.arrival for j in generate_jobs(cfg)])
+    assert arrivals.max() == cfg.horizon - 1
+    # the overflow mass piles on the final slot (the clamp), instead of being
+    # scattered uniformly across mid-horizon slots
+    assert (arrivals == cfg.horizon - 1).mean() > 0.5
+    # slots *before* the exponential ramp reaches the end stay plausible:
+    # nothing lands in a band the process never visited
+    pre_overflow = arrivals[arrivals < cfg.horizon - 1]
+    assert pre_overflow.max() < cfg.horizon - 1
+
+
+def test_interarrival_mean_matches_config_without_overflow():
+    cfg = JobTraceConfig(n_jobs=60, horizon=2000, mean_interarrival=2.0,
+                         burst_prob=0.0, seed=2)
+    arrivals = np.array([j.arrival for j in generate_jobs(cfg)])
+    gaps = np.diff(arrivals)
+    # diurnal modulation scales the rate by [0.4, 1.6]: the mean gap stays in
+    # a broad band around mean_interarrival
+    assert 0.5 < gaps.mean() < 6.0
+    # nowhere near the horizon: no spurious late-slot pile-up
+    assert arrivals.max() < cfg.horizon / 2
