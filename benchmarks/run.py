@@ -9,6 +9,11 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   fig8  contention sweep: utility + fair-share slowdown vs oversubscription
   eq1   RAR iteration-time model table (paper §III-3)
 
+Schedulers are resolved by name through ``repro.sched.registry`` — pass
+``--schedulers gadget las+elastic`` to compare a subset, ``--list`` to see
+every registered name. All simulations run through the event-driven
+``repro.sched.OnlineDriver``.
+
 Scale note: the paper uses S=50, T=200; the default here is a proportionally
 scaled instance so the whole suite runs in minutes on one CPU core. Pass
 ``--full`` for paper-scale settings.
@@ -19,21 +24,24 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.cluster import make_fat_tree
-from repro.cluster.simulator import ClusterSimulator, ContentionConfig
 from repro.cluster.topology import ResourceState
 from repro.cluster.trace import JobTraceConfig, generate_jobs
-from repro.core.baselines import DrfScheduler, FifoScheduler, LasScheduler
-from repro.core.gadget import GadgetScheduler
 from repro.core.gvne import GvneConfig, solve_slot, solve_slot_exact
 from repro.core.problem import DDLJSInstance, ScheduleState
 from repro.core.rar_model import profile_from_arch, rar_iteration_time
+from repro.sched import ContentionConfig, OnlineDriver, registry
 
 ROWS: List[str] = []
+
+# default comparison set: the paper's four policies plus the beyond-paper
+# elastic baseline variants (all resolved through the registry)
+DEFAULT_SCHEDULERS = ("gadget", "fifo", "drf", "las",
+                      "drf+elastic", "las+elastic")
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -42,20 +50,15 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(row, flush=True)
 
 
-def _schedulers(seed: int = 0):
+def _schedulers(seed: int = 0, names: Optional[Sequence[str]] = None):
     return [
-        ("gadget", lambda: GadgetScheduler(GvneConfig(seed=seed))),
-        # paper-faithful static baselines (workers fixed in [1,10], no adapt)
-        ("fifo", lambda: FifoScheduler(seed=seed)),
-        ("drf", lambda: DrfScheduler(seed=seed)),
-        ("las", lambda: LasScheduler(seed=seed)),
-        # beyond-paper strengthened elastic baselines
-        ("drf+elastic", lambda: DrfScheduler(seed=seed, elastic=True)),
-        ("las+elastic", lambda: LasScheduler(seed=seed, elastic=True)),
+        (name, lambda name=name: registry.create(name, seed=seed))
+        for name in (names or DEFAULT_SCHEDULERS)
     ]
 
 
-def fig4_total_utility(full: bool = False) -> None:
+def fig4_total_utility(full: bool = False,
+                       schedulers: Optional[Sequence[str]] = None) -> None:
     """Paper Fig. 4: total utility vs number of jobs."""
     n_servers = 50 if full else 16
     horizon = 200 if full else 60
@@ -66,15 +69,17 @@ def fig4_total_utility(full: bool = False) -> None:
             n_jobs=n_jobs, horizon=horizon,
             mean_interarrival=horizon / max(n_jobs, 1), seed=2))
         inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
-        for name, mk in _schedulers():
+        for name, mk in _schedulers(names=schedulers):
             t0 = time.perf_counter()
-            res = ClusterSimulator(inst).run(mk())
+            res = OnlineDriver(inst).run(mk())
             dt = (time.perf_counter() - t0) * 1e6 / horizon
             emit(f"fig4/{name}/jobs={n_jobs}", dt,
-                 f"total_utility={res.total_utility:.2f}")
+                 f"total_utility={res.total_utility:.2f};"
+                 f"mean_queue_delay={res.avg_queueing_delay():.2f}")
 
 
-def fig4b_heavy_load(full: bool = False) -> None:
+def fig4b_heavy_load(full: bool = False,
+                     schedulers: Optional[Sequence[str]] = None) -> None:
     """Fig. 4 variant at genuine scarcity (jobs need ~10x more iterations than
     the cluster can deliver over the horizon) — the regime where scheduling
     policy separates. GADGET's utility-aware allocation should dominate."""
@@ -91,15 +96,16 @@ def fig4b_heavy_load(full: bool = False) -> None:
             sensitivity_range=(0.0005, 0.005),
             seed=5))
         inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
-        for name, mk in _schedulers():
+        for name, mk in _schedulers(names=schedulers):
             t0 = time.perf_counter()
-            res = ClusterSimulator(inst).run(mk())
+            res = OnlineDriver(inst).run(mk())
             dt = (time.perf_counter() - t0) * 1e6 / horizon
             emit(f"fig4b/{name}/jobs={n_jobs}", dt,
                  f"total_utility={res.total_utility:.2f}")
 
 
 def _capacity_sweep(kind: str, scales, full: bool) -> None:
+    """Embedded-ratio sweep for the registry's default scheduler (gadget)."""
     n_servers = 50 if full else 16
     horizon = 100 if full else 40
     n_jobs = 60 if full else 30
@@ -129,7 +135,7 @@ def _capacity_sweep(kind: str, scales, full: bool) -> None:
                 mean_interarrival=horizon / n_jobs, seed=20 + trial))
             inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
             t0 = time.perf_counter()
-            res = ClusterSimulator(inst).run(GadgetScheduler(GvneConfig(seed=trial)))
+            res = OnlineDriver(inst).run(registry.create("gadget", seed=trial))
             dt_us += (time.perf_counter() - t0) * 1e6 / horizon
             ratios.append(res.embedded_ratio())
         emit(f"fig{'5' if kind == 'node' else '6'}/capacity_x{scale}",
@@ -194,10 +200,10 @@ def fig8_contention_sweep(full: bool = False) -> None:
             sensitivity_range=(0.0005, 0.005),
             seed=8))
         inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
-        sim = ClusterSimulator(
+        driver = OnlineDriver(
             inst, contention=ContentionConfig(oversubscription=oversub))
         t0 = time.perf_counter()
-        res = sim.run(GadgetScheduler(GvneConfig(seed=0)))
+        res = driver.run(registry.create("gadget", seed=0))
         dt = (time.perf_counter() - t0) * 1e6 / horizon
         peak = max((r.max_edge_contention for r in res.records), default=0.0)
         mean_cf = float(np.mean([r.mean_contention_factor for r in res.records]))
@@ -228,20 +234,51 @@ FIGS = {
     "eq1": eq1_rar_time_model,
 }
 
+# figures that compare schedulers and therefore honor --schedulers
+COMPARISON_FIGS = {"fig4", "fig4b"}
+
 
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--only", nargs="*", choices=sorted(FIGS), default=None)
     parser.add_argument("--full", action="store_true",
                         help="paper-scale settings (slow)")
+    parser.add_argument("--list", action="store_true",
+                        help="list registered scheduler names and exit")
+    parser.add_argument("--schedulers", nargs="+", metavar="NAME",
+                        default=None,
+                        help="scheduler names (repro.sched.registry) for the "
+                             "comparison figures; default: "
+                             + " ".join(DEFAULT_SCHEDULERS))
     parser.add_argument("--json", metavar="PATH", default=None,
                         help="also dump the rows as a JSON artifact")
     args = parser.parse_args()
+    if args.list:
+        for name in registry.available():
+            print(name)
+        return
+    for name in args.schedulers or ():
+        if name not in registry.available():
+            parser.error(f"unknown scheduler {name!r}; --list shows the "
+                         "registered names")
+    if args.schedulers:
+        selected = set(args.only or FIGS)
+        if not selected & COMPARISON_FIGS:
+            parser.error("--schedulers only applies to the comparison "
+                         f"figures ({', '.join(sorted(COMPARISON_FIGS))}); "
+                         "the selected figures ignore it")
+        if selected - COMPARISON_FIGS:
+            print("# note: --schedulers applies to the comparison figures "
+                  "only; other figures run their fixed scheduler",
+                  file=sys.stderr)
     print("name,us_per_call,derived")
     for name, fn in FIGS.items():
         if args.only and name not in args.only:
             continue
-        fn(full=args.full)
+        if name in COMPARISON_FIGS:
+            fn(full=args.full, schedulers=args.schedulers)
+        else:
+            fn(full=args.full)
     if args.json:
         import json
 

@@ -3,20 +3,18 @@
 Runs the full paper pipeline on a small cluster in a few seconds:
 fat-tree substrate -> Google-trace-style arrivals -> online temporally greedy
 (Algorithm 1) with per-slot G-VNE embedding (Algorithm 2) -> comparison
-against FIFO / DRF / LAS.
+against FIFO / DRF / LAS, all resolved by name from the scheduler registry
+and driven by the event-driven ``repro.sched.OnlineDriver``.
 
 Usage:  PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.cluster import make_fat_tree
 from repro.cluster.metrics import csv_lines, summarize
-from repro.cluster.simulator import ClusterSimulator, FaultConfig
 from repro.cluster.trace import JobTraceConfig, generate_jobs
-from repro.core.baselines import DrfScheduler, FifoScheduler, LasScheduler
-from repro.core.gadget import GadgetScheduler
-from repro.core.gvne import GvneConfig
 from repro.core.problem import DDLJSInstance
 from repro.core.rar_model import profile_from_arch, optimal_worker_count
+from repro.sched import FaultConfig, OnlineDriver, registry
 
 
 def main() -> None:
@@ -34,20 +32,22 @@ def main() -> None:
     inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=40)
 
     print("\n== GADGET vs baselines (40 jobs / 16 servers / 40 slots) ==")
-    results = []
-    for sched in [GadgetScheduler(GvneConfig(seed=0)), FifoScheduler(),
-                  DrfScheduler(), LasScheduler()]:
-        results.append(ClusterSimulator(inst).run(sched))
+    print("  registered schedulers:", ", ".join(registry.available()))
+    results = [OnlineDriver(inst).run(registry.create(name, seed=0))
+               for name in ("gadget", "fifo", "drf", "las")]
     for line in csv_lines(summarize(results)):
         print(" ", line)
 
-    # 3) with failures + stragglers (fault-tolerant scheduling)
+    # 3) with failures + stragglers (fault-tolerant scheduling): the same
+    # driver, now fed a seeded fault event stream
     print("\n== GADGET under faults (5% server fail, 10% stragglers) ==")
-    sim = ClusterSimulator(inst, FaultConfig(server_fail_prob=0.05,
-                                             straggler_prob=0.10, seed=3))
-    res = sim.run(GadgetScheduler(GvneConfig(seed=0)))
+    driver = OnlineDriver(inst, faults=FaultConfig(server_fail_prob=0.05,
+                                                   straggler_prob=0.10,
+                                                   seed=3))
+    res = driver.run("gadget")
     print(f"  total_utility={res.total_utility:.2f} "
           f"embedded_ratio={res.embedded_ratio():.3f} "
+          f"avg_queue_delay={res.avg_queueing_delay():.2f} slots "
           f"(failure slots: {sum(r.failed_servers for r in res.records)})")
 
 

@@ -19,11 +19,11 @@ import tempfile
 import numpy as np
 
 from repro.cluster import make_fat_tree
-from repro.cluster.simulator import contention_factor
 from repro.cluster.topology import ResourceState
 from repro.core.gadget import GadgetScheduler
 from repro.core.gvne import GvneConfig
 from repro.core.problem import DDLJSInstance, Job, ScheduleState
+from repro.sched import ContentionConfig, SchedulerContext
 from repro.core.rar_model import profile_from_arch
 from repro.core.utility import sqrt_utility
 from repro.configs import get_arch
@@ -78,15 +78,17 @@ def main() -> None:
             checkpoint_dir=tempfile.mkdtemp(prefix=f"job{job.id}_"))
 
     print(f"== GADGET driving elastic RAR training of {ARCHS} ==")
+    contention = ContentionConfig(oversubscription=OVERSUBSCRIPTION)
     for t in range(SLOTS):
         res = ResourceState(graph, oversubscription=OVERSUBSCRIPTION)
-        decision = scheduler.schedule_slot(t, res, state)
+        ctx = SchedulerContext(t=t, res=res, state=state,
+                               contention=contention)
+        decision = scheduler.schedule_slot(ctx)
         # contention-aware pricing: a ring crossing an oversubscribed edge
         # only gets its fair share of the link, so the slot delivers fewer
         # steps (tau(b_i)/tau(b_eff) of the nominal progress, Eq. (1))
         factors = {
-            e.job_id: contention_factor(res, e, inst.job(e.job_id))
-            for e in decision.embeddings
+            e.job_id: ctx.contention_factor(e) for e in decision.embeddings
         }
         state.commit_slot(decision.embeddings,
                           [factors[e.job_id] for e in decision.embeddings])

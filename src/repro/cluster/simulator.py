@@ -1,125 +1,45 @@
-"""Time-slotted cluster simulator — drives any scheduler over a job trace.
+"""Deprecated shim — the slot loop lives in :mod:`repro.sched.driver`.
 
-Generalizes the plain horizon loop with the failure modes a 1000+-node
-deployment must survive (DESIGN.md §8):
+``ClusterSimulator`` used to own a second copy of the horizon loop (faults,
+stragglers, contention, accounting). All of that is now
+:class:`repro.sched.driver.OnlineDriver` consuming a seeded
+:class:`repro.sched.events.FaultEventStream`; this module keeps the old
+entry point and re-exports the moved types so existing imports keep working:
 
-  * **server failures**: a failed server contributes zero capacity for a
-    geometric repair period. Failures strike *mid-slot* (after scheduling):
-    embeddings scheduled onto a newly failed server lose that slot's progress
-    (the job resumes from its last checkpoint — the paper's preemptive-job
-    assumption); from the next slot on the server is out of the resource pool
-    until repaired.
-  * **stragglers**: a straggling server runs at ``straggler_factor`` speed;
-    a synchronous ring runs at the slowest member (Eq. (1) with reduced G),
-    so the slot's effective worker-time is scaled down for the whole ring.
-  * **contention**: with ``ContentionConfig.oversubscription > 1`` edges admit
-    reservations beyond capacity and every ring crossing an oversubscribed
-    edge is re-priced at its fair-share effective bandwidth — progress scales
-    by tau(b_i)/tau(b_eff) per Eq. (1) (see repro.cluster.topology and
-    repro.core.rar_model.contention_progress_factor).
-  * **preemption**: embeddings last exactly one slot; the scheduler freely
-    reshapes rings between slots (elastic worker counts).
+  * :class:`FaultConfig`      -> repro.sched.events
+  * :class:`ContentionConfig` -> repro.sched.api
+  * :class:`SlotRecord` / :class:`SimResult` -> repro.sched.api
+  * :func:`contention_factor` -> repro.sched.api
+
+``ClusterSimulator(inst, faults, contention).run(scheduler)`` is bit-identical
+to the retired loop for any seed (the fault stream reproduces its RNG draw
+order exactly) — but new code should construct an ``OnlineDriver`` directly.
+
+One deliberate semantic change for repeated calls: each ``run()`` resets the
+event stream, so every run on one simulator instance replays the *same*
+fault/straggler sequence (the replay-determinism contract). The retired loop
+instead advanced one shared RNG across calls; to compare runs under
+independent fault draws, build one simulator/driver per seed.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Optional
 
-import numpy as np
-
-from repro.cluster.topology import Embedding, ResourceState
-from repro.core.problem import DDLJSInstance, ScheduleState
-from repro.core.rar_model import contention_progress_factor
-
-
-@dataclasses.dataclass
-class FaultConfig:
-    server_fail_prob: float = 0.0      # per-server per-slot failure prob
-    repair_prob: float = 0.5           # per-slot repair prob once failed
-    straggler_prob: float = 0.0        # per-server per-slot straggle prob
-    straggler_factor: float = 0.4      # relative speed when straggling
-    seed: int = 0
-
-
-@dataclasses.dataclass
-class ContentionConfig:
-    """Shared-bandwidth contention model (ROADMAP: contention-aware traces).
-
-    ``oversubscription=1.0`` (default) keeps the paper's hard-reservation
-    admission, under which no edge can become contended, so behaviour is
-    identical to the isolated-ring simulator. Values > 1 admit up to
-    ``oversubscription * capacity`` of reservations per edge; committed rings
-    then see fair-share effective bandwidth. ``enabled=False`` keeps the
-    relaxed admission but skips the re-pricing (useful as an ablation).
-    """
-
-    oversubscription: float = 1.0
-    enabled: bool = True
-
-
-def contention_factor(res: ResourceState, emb: Embedding, job) -> float:
-    """Fair-share slowdown of one committed ring: tau(b_i)/tau(b_eff) in [0, 1].
-
-    With an Eq. (1) profile the compute terms damp the slowdown
-    (``contention_progress_factor``); profile-less trace jobs fall back to the
-    comm-bound ratio b_eff/b_i. Shared by the simulator and the training
-    example so the pricing cannot drift between them.
-    """
-    if not emb.paths or emb.bandwidth <= 0.0:
-        return 1.0
-    b_eff = res.effective_bandwidth(emb)
-    if b_eff >= emb.bandwidth:
-        return 1.0
-    ratio = max(0.0, b_eff / emb.bandwidth)
-    if job.profile is not None and emb.n_workers > 1:
-        return contention_progress_factor(
-            job.profile, emb.n_workers, job.profile.bandwidth * ratio
-        )
-    return ratio
-
-
-@dataclasses.dataclass
-class SlotRecord:
-    t: int
-    n_active: int
-    n_embedded: int
-    workers_placed: int
-    effective_worker_time: float
-    utility_total: float
-    gpu_utilization: float
-    failed_servers: int
-    max_edge_contention: float = 0.0   # max reserved/capacity over edges
-    mean_contention_factor: float = 1.0  # mean tau(b_i)/tau(b_eff) over rings
-    lost_embeddings: int = 0           # rings voided by mid-slot failures
-
-
-@dataclasses.dataclass
-class SimResult:
-    scheduler: str
-    records: List[SlotRecord]
-    state: ScheduleState
-    completion_slot: Dict[int, Optional[int]]
-
-    @property
-    def total_utility(self) -> float:
-        return self.state.total_utility()
-
-    def embedded_ratio(self) -> float:
-        num = sum(r.n_embedded for r in self.records)
-        den = sum(r.n_active for r in self.records)
-        return num / den if den else 0.0
-
-    def avg_jct(self) -> float:
-        jcts = [
-            c - self.state.inst.job(j).arrival + 1
-            for j, c in self.completion_slot.items()
-            if c is not None
-        ]
-        return float(np.mean(jcts)) if jcts else float("nan")
+from repro.sched.api import (  # noqa: F401  (re-exports)
+    ContentionConfig,
+    SimResult,
+    SlotRecord,
+    contention_factor,
+)
+from repro.sched.events import FaultConfig  # noqa: F401  (re-export)
+from repro.core.problem import DDLJSInstance
 
 
 class ClusterSimulator:
+    """Deprecated: thin wrapper over :class:`repro.sched.driver.OnlineDriver`."""
+
     def __init__(
         self,
         inst: DDLJSInstance,
@@ -129,110 +49,18 @@ class ClusterSimulator:
         self.inst = inst
         self.faults = faults or FaultConfig()
         self.contention = contention or ContentionConfig()
-        self.rng = np.random.default_rng(self.faults.seed)
-
-    def _contention_factor(self, emb: Embedding, res: ResourceState) -> float:
-        if not self.contention.enabled:
-            return 1.0
-        return contention_factor(res, emb, self.inst.job(emb.job_id))
 
     def run(self, scheduler) -> SimResult:
-        inst = self.inst
-        state = ScheduleState(inst)
-        failed: Dict[int, bool] = {s.id: False for s in inst.graph.servers}
-        straggling: Dict[int, bool] = {s.id: False for s in inst.graph.servers}
-        records: List[SlotRecord] = []
-        completion: Dict[int, Optional[int]] = {j.id: None for j in inst.jobs}
-
-        for t in range(inst.horizon):
-            # pre-slot dynamics: repairs + stragglers (new failures strike
-            # mid-slot, *after* scheduling — see the failure wave below)
-            for sid in failed:
-                if failed[sid] and self.rng.random() < self.faults.repair_prob:
-                    failed[sid] = False
-                straggling[sid] = (
-                    not failed[sid]
-                    and self.rng.random() < self.faults.straggler_prob
-                )
-
-            res = ResourceState(
-                inst.graph, oversubscription=self.contention.oversubscription
-            )
-            down_now = {sid for sid, down in failed.items() if down}
-            for sid in down_now:  # zero out capacity of failed servers
-                for r in res.free_node[sid]:
-                    res.free_node[sid][r] = 0.0
-
-            # contract: scheduler commits returned embeddings into res itself
-            decision = scheduler.schedule_slot(t, res, state)
-
-            # mid-slot failure wave: servers that die after placement void the
-            # slot's progress for every ring they participate in
-            wave = {
-                sid
-                for sid, down in failed.items()
-                if not down and self.rng.random() < self.faults.server_fail_prob
-            }
-            for sid in wave:
-                failed[sid] = True
-
-            committed: List[Embedding] = []
-            factors: List[float] = []
-            contention_factors: List[float] = []
-            effective = 0.0
-            placed = 0
-            lost = 0
-            for e in decision.embeddings:
-                assert e.job_id in res.committed, "scheduler must commit embeddings"
-                placed += e.n_workers
-                if any(s in wave for s in e.servers):
-                    factor = 0.0  # slot progress lost; job restarts from ckpt
-                    lost += 1
-                else:
-                    # straggler: synchronous ring runs at slowest member
-                    factor = 1.0
-                    for s in e.servers:
-                        if straggling[s]:
-                            factor = min(factor, self.faults.straggler_factor)
-                    cf = self._contention_factor(e, res)
-                    contention_factors.append(cf)
-                    factor *= cf
-                committed.append(e)
-                factors.append(factor)
-                effective += factor * e.n_workers
-            # z + history accounting via the single shared path
-            state.commit_slot(committed, factors)
-
-            for j in inst.jobs:
-                if completion[j.id] is None and state.remaining(j) <= 1e-9:
-                    completion[j.id] = t
-
-            records.append(
-                SlotRecord(
-                    t=t,
-                    n_active=decision.n_active,
-                    n_embedded=len(committed),
-                    workers_placed=placed,
-                    effective_worker_time=effective,
-                    utility_total=state.total_utility(),
-                    # utilization over healthy capacity only: servers that were
-                    # down when the slot was scheduled don't count as "in use"
-                    gpu_utilization=res.utilization(exclude=down_now).get(
-                        "gpus", 0.0
-                    ),
-                    failed_servers=sum(failed.values()),
-                    max_edge_contention=res.max_edge_contention(),
-                    mean_contention_factor=(
-                        float(np.mean(contention_factors))
-                        if contention_factors
-                        else 1.0
-                    ),
-                    lost_embeddings=lost,
-                )
-            )
-        return SimResult(
-            scheduler=getattr(scheduler, "name", type(scheduler).__name__),
-            records=records,
-            state=state,
-            completion_slot=completion,
+        warnings.warn(
+            "ClusterSimulator is deprecated; use "
+            "repro.sched.OnlineDriver(inst, faults=..., contention=...)"
+            ".run(scheduler)",
+            DeprecationWarning,
+            stacklevel=2,
         )
+        from repro.sched.driver import OnlineDriver
+
+        driver = OnlineDriver(
+            self.inst, faults=self.faults, contention=self.contention
+        )
+        return driver.run(scheduler)

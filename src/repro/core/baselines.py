@@ -3,20 +3,22 @@
 None of these are topology-aware; per the paper, "we place workers based on
 the simple heuristic that greedily allocates workers to servers where a cycle
 can be attained" — implemented here as :func:`greedy_cycle_place`, shared by
-all baselines so the comparison isolates the *scheduling policy*.
+all baselines so the comparison isolates the *scheduling policy*. All
+baselines implement the :class:`repro.sched.api.Scheduler` protocol and
+register into :mod:`repro.sched.registry`.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.cluster.topology import Embedding, ResourceState
-from repro.core.gadget import SlotDecision
 from repro.core.gvne import _ring_order, build_embedding
 from repro.core.problem import Job, ScheduleState
+from repro.sched.api import SchedulerBase, SchedulerContext, SlotDecision
+from repro.sched.registry import register
 
 
 def greedy_cycle_place(
@@ -27,7 +29,9 @@ def greedy_cycle_place(
     Try to colocate on the single freest server; otherwise greedily take
     capacity from the freest servers (rack-local order) until ``workers`` are
     placed and a bandwidth-feasible cycle exists. Falls back to fewer workers
-    only by the caller's choice.
+    only by the caller's choice. Candidates are ordered by
+    ``(-capacity, server_id)`` so placements are reproducible regardless of
+    dict iteration details.
     """
     if workers <= 0:
         return None
@@ -35,12 +39,13 @@ def greedy_cycle_place(
         s.id: res.max_workers_on_server(s.id, job.demands, cap=job.max_workers)
         for s in res.graph.servers
     }
-    # colocate if possible
-    best = max(caps, key=lambda s: caps[s])
+    # colocate if possible (deterministic tie-break: lowest server id wins)
+    best = min(caps, key=lambda s: (-caps[s], s))
     if caps[best] >= workers:
         return build_embedding(res, job, [best], [workers])
     # spread greedily over freest servers
-    order = sorted((s for s, c in caps.items() if c > 0), key=lambda s: -caps[s])
+    order = sorted((s for s, c in caps.items() if c > 0),
+                   key=lambda s: (-caps[s], s))
     chosen: List[int] = []
     counts: List[int] = []
     remaining = workers
@@ -58,7 +63,7 @@ def greedy_cycle_place(
     return build_embedding(res, job, ring, [cmap[s] for s in ring])
 
 
-class BaselineScheduler:
+class BaselineScheduler(SchedulerBase):
     """Paper §VI-2 baseline template.
 
     The paper's baselines use *static* resource allocation: each job's worker
@@ -90,9 +95,8 @@ class BaselineScheduler:
         return int(min(self._fixed[job.id],
                        np.floor(state.remaining(job) + 1e-9)))
 
-    def schedule_slot(
-        self, t: int, res: ResourceState, state: ScheduleState
-    ) -> SlotDecision:
+    def decide(self, ctx: SchedulerContext) -> SlotDecision:
+        t, res, state = ctx.t, ctx.res, ctx.state
         active = state.active_jobs(t)
         embeddings: List[Embedding] = []
         value = 0.0
@@ -151,3 +155,10 @@ BASELINES = {
     "drf": DrfScheduler,
     "las": LasScheduler,
 }
+
+for _name, _cls in BASELINES.items():
+    register(_name, lambda seed=0, _cls=_cls, **kw: _cls(seed=seed, **kw))
+    # beyond-paper strengthened variants: adapt worker count to residual
+    # capacity instead of waiting for the full static ring
+    register(f"{_name}+elastic",
+             lambda seed=0, _cls=_cls, **kw: _cls(seed=seed, elastic=True, **kw))

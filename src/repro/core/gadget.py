@@ -7,32 +7,31 @@ schedule (Theorem 6, p-system with p=1). With the G-VNE per-slot solver
 (alpha = 1/(3*Gamma)), GADGET is 1/(3*Gamma+1)-competitive (Theorem 10).
 
 The scheduler is *online*: at slot t it sees only jobs with a_i <= t and its
-own accumulated state z_{i,t-1}; it never looks ahead.
+own accumulated state z_{i,t-1}; it never looks ahead. It implements the
+:class:`repro.sched.api.Scheduler` protocol — the slot loop itself lives in
+:class:`repro.sched.driver.OnlineDriver` (``run_offline_horizon`` below is a
+deprecation shim over it).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Callable, Optional, Sequence
 
-from repro.cluster.topology import Embedding, ResourceState
 from repro.core.gvne import GvneConfig, GvneResult, solve_slot, solve_slot_exact
 from repro.core.problem import DDLJSInstance, Job, ScheduleState
+from repro.cluster.topology import ResourceState
+from repro.sched.api import SchedulerBase, SchedulerContext, SlotDecision
+from repro.sched.registry import register
+
+__all__ = ["GadgetScheduler", "SlotDecision", "SlotSolver",
+           "run_offline_horizon"]
 
 SlotSolver = Callable[[ResourceState, Sequence[Job], ScheduleState], GvneResult]
 
 
-@dataclasses.dataclass
-class SlotDecision:
-    t: int
-    embeddings: List[Embedding]
-    lp_value: float
-    value: float
-    n_active: int
-    n_embedded: int
-
-
-class GadgetScheduler:
+class GadgetScheduler(SchedulerBase):
     """Online temporally greedy scheduler (Algorithm 1).
 
     Plug a per-slot solver: G-VNE (default, Algorithm 2) or the exact MILP
@@ -45,10 +44,9 @@ class GadgetScheduler:
         self.cfg = cfg or GvneConfig()
         self.exact = exact
 
-    def schedule_slot(
-        self, t: int, res: ResourceState, state: ScheduleState
-    ) -> SlotDecision:
-        """Contract: every returned embedding is committed into ``res``."""
+    def decide(self, ctx: SchedulerContext) -> SlotDecision:
+        """Contract: every returned embedding is committed into ``ctx.res``."""
+        t, res, state = ctx.t, ctx.res, ctx.state
         active = state.active_jobs(t)  # line 3: I[t]
         if not active:
             return SlotDecision(t, [], 0.0, 0.0, 0, 0)
@@ -70,17 +68,29 @@ class GadgetScheduler:
         )
 
 
+register("gadget",
+         lambda seed=0, exact=False, **kw:
+         GadgetScheduler(GvneConfig(seed=seed, **kw), exact=exact))
+register("gadget-exact",
+         lambda seed=0, **kw:
+         GadgetScheduler(GvneConfig(seed=seed, **kw), exact=True))
+
+
 def run_offline_horizon(
     inst: DDLJSInstance,
     scheduler: Optional[GadgetScheduler] = None,
 ) -> ScheduleState:
-    """Run Algorithm 1 over the whole horizon assuming per-slot resources
-    reset each slot (jobs are preemptive; embeddings last one slot). The
-    cluster simulator generalizes this with failures/stragglers."""
-    sched = scheduler or GadgetScheduler()
-    state = ScheduleState(inst)
-    for t in range(inst.horizon):
-        res = ResourceState(inst.graph)  # embeddings last one slot (preemptive)
-        decision = sched.schedule_slot(t, res, state)  # commits into res
-        state.commit_slot(decision.embeddings)  # line 6: z update
-    return state
+    """Deprecated shim: run Algorithm 1 over the whole horizon with per-slot
+    resource resets and no faults/contention. Delegates to
+    :class:`repro.sched.driver.OnlineDriver`, which produces bit-identical
+    z-vectors in this configuration; use the driver directly for anything
+    richer (faults, stragglers, contention, scripted events)."""
+    warnings.warn(
+        "run_offline_horizon is deprecated; use "
+        "repro.sched.OnlineDriver(inst).run(scheduler)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.sched.driver import OnlineDriver
+
+    return OnlineDriver(inst).run(scheduler or GadgetScheduler()).state

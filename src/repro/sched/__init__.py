@@ -1,0 +1,56 @@
+"""repro.sched — the event-driven online scheduling API (single entry point).
+
+GADGET is an *online* algorithm: at slot t a scheduler sees only arrivals
+with a_i <= t and its own accumulated state z_{i,t-1} (paper §V-B). This
+package makes that setting explicit instead of hardwiring it into divergent
+slot loops (cf. Capes et al., arXiv:1908.08082 — event-driven scheduling of
+MPI DDL jobs):
+
+  * :mod:`repro.sched.events`   — typed cluster events + seeded, replayable
+    event streams (fault/straggler waves, scripted scenarios);
+  * :mod:`repro.sched.api`      — the :class:`Scheduler` protocol
+    (``on_event`` + ``schedule_slot(ctx)``), :class:`SchedulerContext`,
+    :class:`SlotDecision`, and the shared contention pricing view;
+  * :mod:`repro.sched.driver`   — :class:`OnlineDriver`, the one slot loop
+    driving any scheduler under any cluster dynamics (the legacy
+    ``run_offline_horizon`` and ``ClusterSimulator.run`` are thin
+    deprecation shims over it);
+  * :mod:`repro.sched.registry` — schedulers resolved by name
+    (``registry.create("gadget", seed=0)``).
+
+Writing a new scenario means writing an event generator, not forking a loop.
+"""
+
+from repro.sched.events import (  # noqa: F401
+    ClusterEvent,
+    CompositeEventStream,
+    EmbeddingCommitted,
+    EventStream,
+    FaultConfig,
+    FaultEventStream,
+    JobArrival,
+    JobCompletion,
+    ScriptedEventStream,
+    ServerFailure,
+    ServerRecovery,
+    SlotTick,
+    StragglerEnd,
+    StragglerOnset,
+    WorkerJoin,
+    WorkerLeave,
+)
+from repro.sched.api import (  # noqa: F401
+    ContentionConfig,
+    LegacySchedulerAdapter,
+    Scheduler,
+    SchedulerBase,
+    SchedulerContext,
+    SimResult,
+    SlotDecision,
+    SlotRecord,
+    as_scheduler,
+    contention_factor,
+)
+from repro.sched.driver import OnlineDriver  # noqa: F401
+from repro.sched import registry  # noqa: F401
+from repro.sched.registry import available, create, register  # noqa: F401

@@ -1,0 +1,240 @@
+"""OnlineDriver — the single slot loop for every scheduler and scenario.
+
+Owns what the two retired loops (``run_offline_horizon`` in core.gadget and
+``ClusterSimulator.run`` in cluster.simulator — both now thin shims over
+this class) used to hardwire:
+
+  * the slot loop over t = 0..T-1 with a fresh per-slot ResourceState
+    (embeddings last one slot — the paper's preemptive-job assumption);
+  * event dispatch: pre-slot events (repairs, straggler onset, arrivals) are
+    applied and delivered to ``scheduler.on_event`` *before* the decision;
+    mid-slot events (the failure wave, scripted membership changes) strike
+    *after* placement;
+  * pricing: mid-slot failures void a ring's slot progress, stragglers run a
+    synchronous ring at its slowest member, contention re-prices rings at
+    their fair-share effective bandwidth (tau(b_i)/tau(b_eff), Eq. (1)), and
+    a mid-slot WorkerLeave credits only the surviving fraction of the ring;
+  * accounting: one ``ScheduleState.commit_slot(embeddings, factors)`` call
+    per slot (the z_{i,t} update, Algorithm 1 line 6), the per-slot
+    :class:`SlotRecord`, and the typed event log.
+
+With faults and contention off the driver is bit-identical to the plain
+horizon loop; with the default :class:`FaultEventStream` it is bit-identical
+to the retired simulator for any seed (same RNG draw order).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.cluster.topology import Embedding, ResourceState
+from repro.core.problem import DDLJSInstance, ScheduleState
+from repro.sched.api import (
+    ContentionConfig,
+    Scheduler,
+    SchedulerContext,
+    SimResult,
+    SlotRecord,
+    as_scheduler,
+)
+from repro.sched.events import (
+    ClusterEvent,
+    EmbeddingCommitted,
+    EventStream,
+    FaultConfig,
+    FaultEventStream,
+    JobArrival,
+    JobCompletion,
+    ServerFailure,
+    ServerRecovery,
+    SlotTick,
+    StragglerEnd,
+    StragglerOnset,
+    WorkerLeave,
+)
+
+
+class OnlineDriver:
+    """Drive any :class:`~repro.sched.api.Scheduler` over a DDLJS instance.
+
+    ``events`` defaults to a :class:`FaultEventStream` built from ``faults``;
+    pass a :class:`ScriptedEventStream` / :class:`CompositeEventStream` for
+    bespoke scenarios. The stream is ``reset()`` at the start of every run,
+    so one driver replays identically across runs (same seed, same result).
+    """
+
+    def __init__(
+        self,
+        inst: DDLJSInstance,
+        *,
+        faults: Optional[FaultConfig] = None,
+        contention: Optional[ContentionConfig] = None,
+        events: Optional[EventStream] = None,
+    ):
+        if faults is not None and events is not None:
+            raise ValueError(
+                "pass either faults= or events=, not both — to combine "
+                "stochastic faults with a scripted scenario, compose them: "
+                "events=CompositeEventStream([FaultEventStream(ids, faults), "
+                "scripted])"
+            )
+        self.inst = inst
+        self.faults = faults or FaultConfig()
+        self.contention = contention or ContentionConfig()
+        self.events = events if events is not None else FaultEventStream(
+            [s.id for s in inst.graph.servers], self.faults
+        )
+
+    def run(self, scheduler: Union[Scheduler, str, None] = None) -> SimResult:
+        if scheduler is None:
+            scheduler = "gadget"
+        if isinstance(scheduler, str):
+            from repro.sched.registry import create
+
+            scheduler = create(scheduler)
+        sched = as_scheduler(scheduler)
+
+        inst = self.inst
+        stream = self.events
+        stream.reset()
+        state = ScheduleState(inst)
+        failed: set = set()
+        straggling: Dict[int, float] = {}
+        records: List[SlotRecord] = []
+        completion: Dict[int, Optional[int]] = {j.id: None for j in inst.jobs}
+        log: List[ClusterEvent] = []
+
+        for t in range(inst.horizon):
+            # -- pre-slot events: arrivals + repairs + straggler transitions
+            pre: List[ClusterEvent] = [SlotTick(t)]
+            pre += [JobArrival(t, j.id) for j in inst.jobs if j.arrival == t]
+            pre += stream.pre_slot(t)
+            for ev in pre:
+                if isinstance(ev, ServerRecovery):
+                    failed.discard(ev.server_id)
+                elif isinstance(ev, ServerFailure):
+                    failed.add(ev.server_id)  # pre-slot failure: down before
+                    straggling.pop(ev.server_id, None)  # scheduling
+                elif isinstance(ev, StragglerOnset):
+                    straggling[ev.server_id] = ev.factor
+                elif isinstance(ev, StragglerEnd):
+                    straggling.pop(ev.server_id, None)
+
+            res = ResourceState(
+                inst.graph, oversubscription=self.contention.oversubscription
+            )
+            down_now = frozenset(failed)
+            for sid in down_now:  # zero out capacity of failed servers
+                for r in res.free_node[sid]:
+                    res.free_node[sid][r] = 0.0
+
+            ctx = SchedulerContext(
+                t=t,
+                res=res,
+                state=state,
+                contention=self.contention,
+                failed=down_now,
+                straggling=dict(straggling),
+            )
+            for ev in pre:
+                log.append(ev)
+                sched.on_event(ev, ctx)
+
+            # -- the decision (Algorithm 1 line 4); scheduler commits into res
+            decision = sched.schedule_slot(ctx)
+
+            # -- mid-slot events: the failure wave + scripted ring changes
+            mid = stream.mid_slot(t)
+            wave: set = set()
+            left: Dict[int, int] = {}
+            for ev in mid:
+                if isinstance(ev, ServerFailure):
+                    wave.add(ev.server_id)
+                    failed.add(ev.server_id)
+                elif isinstance(ev, ServerRecovery):
+                    failed.discard(ev.server_id)
+                elif isinstance(ev, StragglerOnset):  # affects later slots
+                    straggling[ev.server_id] = ev.factor
+                elif isinstance(ev, StragglerEnd):
+                    straggling.pop(ev.server_id, None)
+                elif isinstance(ev, WorkerLeave):
+                    left[ev.job_id] = left.get(ev.job_id, 0) + ev.n
+                log.append(ev)
+                sched.on_event(ev, ctx)
+
+            # -- pricing + accounting
+            committed: List[Embedding] = []
+            factors: List[float] = []
+            contention_factors: List[float] = []
+            effective = 0.0
+            placed = 0
+            lost = 0
+            for e in decision.embeddings:
+                assert e.job_id in res.committed, \
+                    "scheduler must commit embeddings"
+                placed += e.n_workers
+                if any(s in wave for s in e.servers):
+                    factor = 0.0  # slot progress lost; job restarts from ckpt
+                    lost += 1
+                else:
+                    # straggler: synchronous ring runs at slowest member
+                    factor = 1.0
+                    for s in e.servers:
+                        if s in ctx.straggling:
+                            factor = min(factor, ctx.straggling[s])
+                    if e.job_id in left and e.n_workers > 0:
+                        # mid-slot leave: only the surviving fraction of the
+                        # ring's worker-time is credited (re-ring next slot)
+                        factor *= max(
+                            0.0, (e.n_workers - left[e.job_id]) / e.n_workers
+                        )
+                    cf = ctx.contention_factor(e)
+                    contention_factors.append(cf)
+                    factor *= cf
+                committed.append(e)
+                factors.append(factor)
+                effective += factor * e.n_workers
+                log.append(EmbeddingCommitted(t, e.job_id, e.n_workers))
+            # z + history accounting via the single shared path
+            state.commit_slot(committed, factors)
+
+            for j in inst.jobs:
+                if completion[j.id] is None and state.remaining(j) <= 1e-9:
+                    completion[j.id] = t
+                    ev = JobCompletion(t, j.id)
+                    log.append(ev)
+                    sched.on_event(ev, ctx)
+
+            records.append(
+                SlotRecord(
+                    t=t,
+                    n_active=decision.n_active,
+                    n_embedded=len(committed),
+                    workers_placed=placed,
+                    effective_worker_time=effective,
+                    utility_total=state.total_utility(),
+                    # utilization over healthy capacity only: servers that
+                    # were down when the slot was scheduled don't count as
+                    # "in use"
+                    gpu_utilization=res.utilization(exclude=down_now).get(
+                        "gpus", 0.0
+                    ),
+                    failed_servers=len(failed),
+                    max_edge_contention=res.max_edge_contention(),
+                    mean_contention_factor=(
+                        float(np.mean(contention_factors))
+                        if contention_factors
+                        else 1.0
+                    ),
+                    lost_embeddings=lost,
+                )
+            )
+        return SimResult(
+            scheduler=sched.name,
+            records=records,
+            state=state,
+            completion_slot=completion,
+            events=log,
+        )

@@ -1,0 +1,216 @@
+"""Typed cluster events + seeded, replayable event streams.
+
+Every quantity the paper's online setting (§V-B) reacts to is an explicit
+event rather than a hardcoded branch of a slot loop:
+
+  * :class:`SlotTick`        — the slot boundary t of the accumulators z_{i,t}
+    (constraint (5): allocations are committed once per slot).
+  * :class:`JobArrival`      — job i becomes visible at a_i (constraint (6):
+    no allocation before arrival; the scheduler never looks ahead).
+  * :class:`JobCompletion`   — z_{i,t} reached the worker-time budget
+    min_r F_i^r / l_i^r (Eq. (11)); the job leaves the active set I[t].
+  * :class:`ServerFailure` / :class:`ServerRecovery` — server s drops out of
+    / returns to the substrate capacity C_s^r. Failures emitted *mid-slot*
+    void that slot's progress for every ring touching the server (the
+    preemptive-job assumption: resume from last checkpoint).
+  * :class:`StragglerOnset` / :class:`StragglerEnd` — server s runs at
+    ``factor`` speed; a synchronous ring runs at its slowest member (Eq. (1)
+    with reduced effective G).
+  * :class:`WorkerJoin` / :class:`WorkerLeave` — mid-slot ring membership
+    changes (the ROADMAP's elastic re-ring channel): a leave mid-slot shrinks
+    the ring and only the surviving fraction of the slot's worker-time is
+    credited; joins take effect at the next slot boundary (rings reshape
+    between slots).
+  * :class:`EmbeddingCommitted` — one ring placement (x, y, r) committed for
+    a job this slot; the event log therefore fully determines per-job
+    first-scheduling slots (queueing delay) and completion (makespan).
+
+Streams are *seeded and replayable*: ``reset()`` rewinds to the initial RNG
+state, so the same stream replayed against the same scheduler reproduces the
+exact same run (the event-replay determinism contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterEvent:
+    """Base event: ``t`` is the slot index the event belongs to."""
+
+    t: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotTick(ClusterEvent):
+    """Slot boundary — emitted by the driver at the start of every slot."""
+
+
+@dataclasses.dataclass(frozen=True)
+class JobArrival(ClusterEvent):
+    job_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class JobCompletion(ClusterEvent):
+    job_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerFailure(ClusterEvent):
+    server_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerRecovery(ClusterEvent):
+    server_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerOnset(ClusterEvent):
+    server_id: int
+    factor: float = 0.4  # relative speed while straggling
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerEnd(ClusterEvent):
+    server_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerJoin(ClusterEvent):
+    job_id: int
+    n: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerLeave(ClusterEvent):
+    job_id: int
+    n: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingCommitted(ClusterEvent):
+    """A ring of ``n_workers`` committed for ``job_id`` at slot ``t``."""
+
+    job_id: int
+    n_workers: int
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    """Stochastic fault/straggler dynamics (drives :class:`FaultEventStream`)."""
+
+    server_fail_prob: float = 0.0      # per-server per-slot failure prob
+    repair_prob: float = 0.5           # per-slot repair prob once failed
+    straggler_prob: float = 0.0        # per-server per-slot straggle prob
+    straggler_factor: float = 0.4      # relative speed when straggling
+    seed: int = 0
+
+
+class EventStream:
+    """Replayable source of cluster events, split into two phases per slot.
+
+    ``pre_slot(t)`` events are visible to the scheduler *before* it decides
+    (repairs, straggler onset, scripted membership changes); ``mid_slot(t)``
+    events strike *after* placement (the failure wave — rings already placed
+    on a newly failed server lose the slot). ``reset()`` rewinds the stream
+    so a run can be replayed bit-for-bit.
+    """
+
+    def reset(self) -> None:
+        """Rewind to the initial state (re-seed any RNG)."""
+
+    def pre_slot(self, t: int) -> List[ClusterEvent]:
+        return []
+
+    def mid_slot(self, t: int) -> List[ClusterEvent]:
+        return []
+
+
+class FaultEventStream(EventStream):
+    """Geometric failure/repair + Bernoulli straggler dynamics as events.
+
+    Reproduces the legacy ``ClusterSimulator`` draw order exactly (one RNG,
+    per-server: repair draw only while failed, straggler draw only while
+    healthy, failure draw only while up — short-circuits and all), so a
+    driver consuming this stream is bit-identical to the retired loop for
+    any seed.
+    """
+
+    def __init__(self, server_ids: Sequence[int], cfg: FaultConfig):
+        self.server_ids = list(server_ids)
+        self.cfg = cfg
+        self.reset()
+
+    def reset(self) -> None:
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self._failed: Dict[int, bool] = {s: False for s in self.server_ids}
+        self._straggling: Dict[int, bool] = {s: False for s in self.server_ids}
+
+    def pre_slot(self, t: int) -> List[ClusterEvent]:
+        cfg = self.cfg
+        out: List[ClusterEvent] = []
+        for sid in self._failed:
+            if self._failed[sid] and self.rng.random() < cfg.repair_prob:
+                self._failed[sid] = False
+                out.append(ServerRecovery(t, sid))
+            # no straggler draw while failed (matches the legacy short-circuit)
+            now = (not self._failed[sid]
+                   and self.rng.random() < cfg.straggler_prob)
+            if now and not self._straggling[sid]:
+                out.append(StragglerOnset(t, sid, cfg.straggler_factor))
+            elif self._straggling[sid] and not now:
+                out.append(StragglerEnd(t, sid))
+            self._straggling[sid] = now
+        return out
+
+    def mid_slot(self, t: int) -> List[ClusterEvent]:
+        out: List[ClusterEvent] = []
+        for sid in self._failed:
+            if not self._failed[sid] \
+                    and self.rng.random() < self.cfg.server_fail_prob:
+                self._failed[sid] = True
+                out.append(ServerFailure(t, sid))
+        return out
+
+
+class ScriptedEventStream(EventStream):
+    """Fixed event script for tests and what-if scenarios.
+
+    ``pre`` / ``mid`` hold the events for their phase; each call returns the
+    subset with matching slot ``t``. Deterministic, trivially replayable.
+    """
+
+    def __init__(self, pre: Iterable[ClusterEvent] = (),
+                 mid: Iterable[ClusterEvent] = ()):
+        self.pre = list(pre)
+        self.mid = list(mid)
+
+    def pre_slot(self, t: int) -> List[ClusterEvent]:
+        return [e for e in self.pre if e.t == t]
+
+    def mid_slot(self, t: int) -> List[ClusterEvent]:
+        return [e for e in self.mid if e.t == t]
+
+
+class CompositeEventStream(EventStream):
+    """Concatenate several streams (e.g. stochastic faults + a scripted
+    membership-change scenario) preserving per-stream order."""
+
+    def __init__(self, streams: Sequence[EventStream]):
+        self.streams = list(streams)
+
+    def reset(self) -> None:
+        for s in self.streams:
+            s.reset()
+
+    def pre_slot(self, t: int) -> List[ClusterEvent]:
+        return [e for s in self.streams for e in s.pre_slot(t)]
+
+    def mid_slot(self, t: int) -> List[ClusterEvent]:
+        return [e for s in self.streams for e in s.mid_slot(t)]

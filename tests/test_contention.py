@@ -64,7 +64,11 @@ def make_job(jid: int, bw: float = RING_BW) -> Job:
 
 
 class FixedScheduler:
-    """Commits a fixed plan of (embedding, demands) each slot (test double)."""
+    """Commits a fixed plan of (embedding, demands) each slot (test double).
+
+    Deliberately keeps the legacy duck-typed 3-arg ``schedule_slot`` so the
+    simulator shim exercises ``repro.sched.api.LegacySchedulerAdapter``.
+    """
 
     name = "fixed"
 

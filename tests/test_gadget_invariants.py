@@ -29,11 +29,14 @@ def instance():
 
 def _run_slots(instance):
     """Drive Algorithm 1 slot by slot, yielding (t, res, decision)."""
+    from repro.sched import SchedulerContext
+
     state = ScheduleState(instance)
     sched = GadgetScheduler(GvneConfig(seed=3))
     for t in range(instance.horizon):
         res = ResourceState(instance.graph)
-        decision = sched.schedule_slot(t, res, state)
+        decision = sched.schedule_slot(SchedulerContext(t=t, res=res,
+                                                        state=state))
         yield t, res, decision
         state.commit_slot(decision.embeddings)
 

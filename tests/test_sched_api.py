@@ -1,0 +1,393 @@
+"""repro.sched API tests (ISSUE 3).
+
+Covers the acceptance criteria of the event-driven scheduling redesign:
+
+  * golden equivalence: OnlineDriver with faults/contention off matches a
+    reference implementation of the plain horizon loop (and the
+    run_offline_horizon shim) z-vector-exactly;
+  * event-replay determinism: same seed -> identical SimResult across runs;
+  * the legacy shims (run_offline_horizon, ClusterSimulator.run, 3-arg
+    schedule_slot, duck-typed schedulers) keep working;
+  * the scheduler registry resolves all four paper schedulers by name;
+  * typed events reach Scheduler.on_event in order, and scripted
+    WorkerLeave / pre-slot failure events change accounting as documented;
+  * event-log-derived metrics: makespan + per-job queueing delay;
+  * deterministic greedy_cycle_place tie-breaking.
+"""
+
+import warnings
+
+import pytest
+
+from repro.cluster import make_fat_tree
+from repro.cluster.metrics import summarize
+from repro.cluster.simulator import ClusterSimulator
+from repro.cluster.topology import Embedding, Link, ResourceState, Server, \
+    SubstrateGraph
+from repro.cluster.trace import JobTraceConfig, generate_jobs
+from repro.core.baselines import FifoScheduler, greedy_cycle_place
+from repro.core.gadget import GadgetScheduler, run_offline_horizon
+from repro.core.gvne import GvneConfig
+from repro.core.problem import DDLJSInstance, Job, ScheduleState
+from repro.core.utility import sqrt_utility
+from repro.sched import (
+    ContentionConfig,
+    FaultConfig,
+    FaultEventStream,
+    JobArrival,
+    JobCompletion,
+    OnlineDriver,
+    SchedulerBase,
+    SchedulerContext,
+    ScriptedEventStream,
+    ServerFailure,
+    SlotDecision,
+    SlotTick,
+    StragglerOnset,
+    WorkerLeave,
+    registry,
+)
+
+
+@pytest.fixture(scope="module")
+def instance():
+    graph = make_fat_tree(n_servers=10, seed=1)
+    jobs = generate_jobs(JobTraceConfig(n_jobs=12, horizon=20, seed=2))
+    return DDLJSInstance(graph=graph, jobs=jobs, horizon=20)
+
+
+def _reference_offline_horizon(inst, sched) -> ScheduleState:
+    """The retired run_offline_horizon loop, inlined as the golden reference:
+    fresh per-slot resources, full worker-time credit, no faults."""
+    state = ScheduleState(inst)
+    for t in range(inst.horizon):
+        res = ResourceState(inst.graph)
+        decision = sched.schedule_slot(SchedulerContext(t=t, res=res,
+                                                        state=state))
+        state.commit_slot(decision.embeddings)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence + shims
+# ---------------------------------------------------------------------------
+
+def test_golden_equivalence_driver_matches_reference_loop(instance):
+    """Faults/contention off: the OnlineDriver z-vector equals the plain
+    horizon loop exactly (not approximately) for gadget and a baseline."""
+    for mk in (lambda: GadgetScheduler(GvneConfig(seed=0)),
+               lambda: FifoScheduler(seed=0)):
+        ref = _reference_offline_horizon(instance, mk())
+        out = OnlineDriver(instance).run(mk())
+        assert out.state.z == ref.z  # exact, bit-for-bit
+        assert out.state.total_utility() == ref.total_utility()
+
+
+def test_run_offline_horizon_is_a_shim_over_the_driver(instance):
+    with pytest.deprecated_call():
+        state = run_offline_horizon(instance, GadgetScheduler(GvneConfig(seed=0)))
+    out = OnlineDriver(instance).run(GadgetScheduler(GvneConfig(seed=0)))
+    assert state.z == out.state.z
+
+
+def test_cluster_simulator_is_a_shim_over_the_driver(instance):
+    faults = FaultConfig(server_fail_prob=0.1, straggler_prob=0.2, seed=5)
+    with pytest.deprecated_call():
+        old = ClusterSimulator(instance, faults).run(
+            GadgetScheduler(GvneConfig(seed=0)))
+    new = OnlineDriver(instance, faults=faults).run(
+        GadgetScheduler(GvneConfig(seed=0)))
+    assert old.state.z == new.state.z
+    assert old.completion_slot == new.completion_slot
+    assert old.records == new.records
+
+
+def test_legacy_three_arg_schedule_slot_still_works(instance):
+    state = ScheduleState(instance)
+    res = ResourceState(instance.graph)
+    sched = GadgetScheduler(GvneConfig(seed=0))
+    with pytest.deprecated_call():
+        legacy = sched.schedule_slot(5, res, state)
+    fresh = GadgetScheduler(GvneConfig(seed=0)).schedule_slot(
+        SchedulerContext(t=5, res=ResourceState(instance.graph), state=state))
+    assert isinstance(legacy, SlotDecision)
+    assert legacy.n_active == fresh.n_active
+    assert [e.job_id for e in legacy.embeddings] == \
+        [e.job_id for e in fresh.embeddings]
+
+
+def test_duck_typed_scheduler_runs_via_adapter(instance):
+    class Duck:
+        name = "duck"
+
+        def schedule_slot(self, t, res, state):  # legacy implicit contract
+            return SlotDecision(t, [], 0.0, 0.0,
+                                len(state.active_jobs(t)), 0)
+
+    out = OnlineDriver(instance).run(Duck())
+    assert out.scheduler == "duck"
+    assert all(r.n_embedded == 0 for r in out.records)
+
+
+def test_star_args_scheduler_treated_as_legacy(instance):
+    class StarDuck:
+        name = "star-duck"
+
+        def schedule_slot(self, *args):
+            t, res, state = args  # legacy triple via *args
+            return SlotDecision(t, [], 0.0, 0.0,
+                                len(state.active_jobs(t)), 0)
+
+    out = OnlineDriver(instance).run(StarDuck())
+    assert out.scheduler == "star-duck"
+
+
+def test_driver_rejects_faults_alongside_explicit_events(instance):
+    with pytest.raises(ValueError, match="CompositeEventStream"):
+        OnlineDriver(instance,
+                     faults=FaultConfig(server_fail_prob=0.1),
+                     events=ScriptedEventStream())
+
+
+# ---------------------------------------------------------------------------
+# replayability
+# ---------------------------------------------------------------------------
+
+def test_event_replay_determinism(instance):
+    """Same seed -> identical SimResult across two runs (stream resets)."""
+    faults = FaultConfig(server_fail_prob=0.15, repair_prob=0.4,
+                         straggler_prob=0.25, seed=7)
+    contention = ContentionConfig(oversubscription=1.5)
+    driver = OnlineDriver(instance, faults=faults, contention=contention)
+    a = driver.run(GadgetScheduler(GvneConfig(seed=0)))
+    b = driver.run(GadgetScheduler(GvneConfig(seed=0)))
+    assert a.state.z == b.state.z
+    assert a.records == b.records
+    assert a.completion_slot == b.completion_slot
+    assert a.events == b.events
+
+
+def test_fault_event_stream_replays_identically():
+    cfg = FaultConfig(server_fail_prob=0.3, repair_prob=0.5,
+                      straggler_prob=0.3, seed=11)
+    stream = FaultEventStream(list(range(6)), cfg)
+    first = [(stream.pre_slot(t), stream.mid_slot(t)) for t in range(10)]
+    stream.reset()
+    second = [(stream.pre_slot(t), stream.mid_slot(t)) for t in range(10)]
+    assert first == second
+    assert any(pre or mid for pre, mid in first)  # dynamics actually fired
+
+
+# ---------------------------------------------------------------------------
+# events reach the scheduler
+# ---------------------------------------------------------------------------
+
+class RecordingScheduler(SchedulerBase):
+    name = "recorder"
+
+    def __init__(self):
+        self.seen = []
+
+    def on_event(self, event, ctx):
+        self.seen.append(event)
+
+    def decide(self, ctx):
+        return SlotDecision(ctx.t, [], 0.0, 0.0, len(ctx.active_jobs()), 0)
+
+
+def test_scheduler_sees_typed_events(instance):
+    sched = RecordingScheduler()
+    OnlineDriver(
+        instance,
+        faults=FaultConfig(server_fail_prob=1.0, repair_prob=0.0, seed=0),
+    ).run(sched)
+    ticks = [e for e in sched.seen if isinstance(e, SlotTick)]
+    assert [e.t for e in ticks] == list(range(instance.horizon))
+    arrivals = [e for e in sched.seen if isinstance(e, JobArrival)]
+    assert sorted(e.job_id for e in arrivals) == \
+        sorted(j.id for j in instance.jobs)
+    for ev in arrivals:  # arrival events fire exactly at a_i
+        assert instance.job(ev.job_id).arrival == ev.t
+    failures = [e for e in sched.seen if isinstance(e, ServerFailure)]
+    assert {e.server_id for e in failures} == \
+        {s.id for s in instance.graph.servers}
+    assert all(e.t == 0 for e in failures)  # fail_prob=1: whole wave at t=0
+
+
+def test_job_completion_events_match_completion_slots(instance):
+    class Greedy(RecordingScheduler):
+        name = "greedy-coloc"
+
+        def decide(self, ctx):
+            embeddings = []
+            for job in ctx.active_jobs():
+                w = min(job.max_workers,
+                        int(ctx.state.remaining(job) + 1e-9))
+                emb = greedy_cycle_place(ctx.res, job, w) if w >= 1 else None
+                if emb is not None:
+                    ctx.res.commit(emb, job.demands)
+                    embeddings.append(emb)
+            return SlotDecision(ctx.t, embeddings, 0.0, 0.0,
+                                len(ctx.active_jobs()), len(embeddings))
+
+    sched = Greedy()
+    out = OnlineDriver(instance).run(sched)
+    completions = {e.job_id: e.t for e in sched.seen
+                   if isinstance(e, JobCompletion)}
+    assert completions == {j: c for j, c in out.completion_slot.items()
+                           if c is not None}
+
+
+# ---------------------------------------------------------------------------
+# scripted events: membership changes + pre-slot failures
+# ---------------------------------------------------------------------------
+
+def _one_job_instance(horizon=3, budget=8.0):
+    servers = [Server(0, 0, {"gpus": 4.0}), Server(1, 0, {"gpus": 4.0})]
+    links = []
+    for s in servers:
+        links.append(Link(s.node, "r0", 100.0))
+        links.append(Link("r0", s.node, 100.0))
+    graph = SubstrateGraph(servers, links, n_racks=1, n_core=0)
+    job = Job(id=0, arrival=0, max_workers=2, demands={"gpus": 1.0},
+              budgets={"gpus": budget}, bandwidth=1.0, zeta=1.0,
+              utility=sqrt_utility(1.0))
+    return DDLJSInstance(graph=graph, jobs=[job], horizon=horizon)
+
+
+class ColocTwo(SchedulerBase):
+    """Places a colocated 2-worker ring for job 0 whenever it is active."""
+
+    name = "coloc2"
+
+    def decide(self, ctx):
+        embeddings = []
+        for job in ctx.active_jobs():
+            emb = Embedding(job.id, [(0, 2)], [], job.bandwidth)
+            if ctx.res.feasible(emb, job.demands):
+                ctx.res.commit(emb, job.demands)
+                embeddings.append(emb)
+        return SlotDecision(ctx.t, embeddings, 0.0, 0.0,
+                            len(ctx.active_jobs()), len(embeddings))
+
+
+def test_mid_slot_worker_leave_credits_surviving_fraction():
+    inst = _one_job_instance(horizon=1)
+    out = OnlineDriver(
+        inst, events=ScriptedEventStream(mid=[WorkerLeave(0, job_id=0, n=1)])
+    ).run(ColocTwo())
+    # 2-worker ring, one leaves mid-slot: credit (2-1)/2 of 2 worker-time
+    assert out.state.z[0] == pytest.approx(1.0)
+    assert out.records[0].effective_worker_time == pytest.approx(1.0)
+
+
+def test_pre_slot_scripted_failure_removes_capacity():
+    inst = _one_job_instance(horizon=2)
+    out = OnlineDriver(
+        inst, events=ScriptedEventStream(pre=[ServerFailure(0, server_id=0)])
+    ).run(ColocTwo())
+    # server 0 is down before slot 0 is scheduled: no ring fits there
+    assert out.records[0].n_embedded == 0
+    assert out.records[0].failed_servers == 1
+    # no recovery event: still down at slot 1
+    assert out.records[1].n_embedded == 0
+
+
+def test_pre_slot_scripted_straggler_scales_progress():
+    inst = _one_job_instance(horizon=1)
+    out = OnlineDriver(
+        inst,
+        events=ScriptedEventStream(
+            pre=[StragglerOnset(0, server_id=0, factor=0.25)]),
+    ).run(ColocTwo())
+    # ring runs at the slowest member: 0.25 * 2 workers
+    assert out.state.z[0] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_all_paper_schedulers(instance):
+    assert {"gadget", "fifo", "drf", "las"} <= set(registry.available())
+    for name in ("gadget", "fifo", "drf", "las"):
+        sched = registry.create(name, seed=0)
+        assert sched.name == name
+        out = OnlineDriver(instance).run(sched)
+        assert out.scheduler == name
+        assert out.total_utility >= 0.0
+
+
+def test_registry_unknown_name_raises():
+    with pytest.raises(KeyError):
+        registry.create("definitely-not-a-scheduler")
+
+
+def test_registry_stamps_variant_names():
+    """Variant registrations stay distinguishable in SimResult.scheduler."""
+    assert registry.create("drf+elastic", seed=0).name == "drf+elastic"
+    assert registry.create("gadget-exact", seed=0).name == "gadget-exact"
+    assert registry.create("drf", seed=0).name == "drf"
+
+
+def test_driver_resolves_scheduler_by_name(instance):
+    by_name = OnlineDriver(instance).run("fifo")
+    by_obj = OnlineDriver(instance).run(FifoScheduler(seed=0))
+    assert by_name.state.z == by_obj.state.z
+
+
+# ---------------------------------------------------------------------------
+# event-log-derived metrics
+# ---------------------------------------------------------------------------
+
+def test_makespan_and_queueing_delay_from_event_log():
+    inst = _one_job_instance(horizon=5, budget=4.0)
+    inst.jobs[0].arrival = 1
+    out = OnlineDriver(inst).run(ColocTwo())
+    # arrives t=1, 2 workers/slot, budget 4 worker-time -> completes at t=2
+    assert out.first_embed_slots() == {0: 1}
+    assert out.queueing_delays() == {0: 0}
+    assert out.completion_slot == {0: 2}
+    assert out.makespan() == pytest.approx(3.0)
+    rows = summarize([out])
+    assert rows[0]["makespan"] == pytest.approx(3.0)
+    assert rows[0]["mean_queue_delay"] == pytest.approx(0.0)
+
+
+def test_queueing_delay_counts_blocked_slots():
+    inst = _one_job_instance(horizon=4)
+
+    class Lazy(ColocTwo):
+        name = "lazy"
+
+        def decide(self, ctx):  # refuses to schedule before slot 2
+            if ctx.t < 2:
+                return SlotDecision(ctx.t, [], 0.0, 0.0,
+                                    len(ctx.active_jobs()), 0)
+            return super().decide(ctx)
+
+    out = OnlineDriver(inst).run(Lazy())
+    assert out.first_embed_slots() == {0: 2}
+    assert out.queueing_delays() == {0: 2}
+
+
+# ---------------------------------------------------------------------------
+# deterministic baseline placement
+# ---------------------------------------------------------------------------
+
+def test_greedy_cycle_place_breaks_capacity_ties_by_server_id():
+    servers = [Server(i, 0, {"gpus": 4.0}) for i in range(4)]
+    links = []
+    for s in servers:
+        links.append(Link(s.node, "r0", 100.0))
+        links.append(Link("r0", s.node, 100.0))
+    graph = SubstrateGraph(servers, links, n_racks=1, n_core=0)
+    job = Job(id=0, arrival=0, max_workers=8, demands={"gpus": 1.0},
+              budgets={"gpus": 100.0}, bandwidth=1.0, zeta=1.0,
+              utility=sqrt_utility(1.0))
+    # colocation: every server ties at capacity 4 -> lowest id wins
+    emb = greedy_cycle_place(ResourceState(graph), job, 4)
+    assert emb.groups == [(0, 4)]
+    # spread: 6 workers over tied servers -> ids 0,1 first
+    emb = greedy_cycle_place(ResourceState(graph), job, 6)
+    assert sorted(emb.servers) == [0, 1]

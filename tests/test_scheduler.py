@@ -29,10 +29,12 @@ def test_online_no_lookahead(small_instance):
     state = ScheduleState(small_instance)
     sched = GadgetScheduler(GvneConfig(seed=0))
     from repro.cluster.topology import ResourceState
+    from repro.sched import SchedulerContext
 
     for t in range(small_instance.horizon):
         res = ResourceState(small_instance.graph)
-        decision = sched.schedule_slot(t, res, state)
+        decision = sched.schedule_slot(SchedulerContext(t=t, res=res,
+                                                        state=state))
         for e in decision.embeddings:
             assert small_instance.job(e.job_id).arrival <= t
         state.commit_slot(decision.embeddings)
@@ -50,12 +52,14 @@ def test_budget_never_exceeded(small_instance):
 def test_per_slot_worker_cap(small_instance):
     """No job ever gets more than N_i workers in one slot (constraint 2)."""
     from repro.cluster.topology import ResourceState
+    from repro.sched import SchedulerContext
 
     state = ScheduleState(small_instance)
     sched = GadgetScheduler(GvneConfig(seed=0))
     for t in range(small_instance.horizon):
         res = ResourceState(small_instance.graph)
-        decision = sched.schedule_slot(t, res, state)
+        decision = sched.schedule_slot(SchedulerContext(t=t, res=res,
+                                                        state=state))
         for e in decision.embeddings:
             assert e.n_workers <= small_instance.job(e.job_id).max_workers
         state.commit_slot(decision.embeddings)
