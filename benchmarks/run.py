@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   fig7  G-VNE approximation ratio vs exact branch-and-bound (HiGHS)
   fig8  contention sweep: utility + fair-share slowdown vs oversubscription
   eq1   RAR iteration-time model table (paper §III-3)
+  re_ring  mid-slot re-ring (elastic reshard) cost vs the paper's
+           checkpoint-preemption model (spawns 8 XLA host devices)
 
 Schedulers are resolved by name through ``repro.sched.registry`` — pass
 ``--schedulers gadget las+elastic`` to compare a subset, ``--list`` to see
@@ -214,6 +216,102 @@ def fig8_contention_sweep(full: bool = False) -> None:
              f"mean_contention_factor={mean_cf:.4f}")
 
 
+def re_ring_cost(full: bool = False) -> None:
+    """Mid-slot re-ring vs the paper's checkpoint-preemption model.
+
+    The paper prices a ring-membership change as a preemption: the job stops,
+    checkpoints, and restarts from the checkpoint at the new size. The
+    elastic path instead re-rings in place — params are replicated over the
+    data axis, so reforming over the survivors is a ``device_put`` reshard
+    onto the smaller mesh. This sweep measures both on a reduced model over
+    8 XLA host devices (spawned as a subprocess; jax must not initialize in
+    this parent). Collective mode is psum to keep the warm-up compiles
+    cheap — the measured costs (reshard vs ckpt write+read) are
+    mode-independent.
+    """
+    import os
+    import subprocess
+    import textwrap
+
+    repeats = 5 if full else 3
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import tempfile, time
+        import jax
+        from repro.configs import get_arch
+        from repro.models.model import build_model
+        from repro.data.pipeline import SyntheticTokens
+        from repro.training.checkpoint import load_checkpoint, save_checkpoint
+        from repro.training.elastic import ElasticTrainer, SlotPlan
+        from repro.training.optimizer import make_optimizer
+
+        cfg = get_arch("qwen3-0.6b").reduced()
+        model = build_model(cfg)
+        data = SyntheticTokens(cfg.vocab, 16, 8, seed=0)
+        ckdir = tempfile.mkdtemp(prefix="re_ring_bench_")
+        tr = ElasticTrainer(model, make_optimizer("sgdm"), data,
+                            global_batch=8, base_lr=1e-2, mode="psum",
+                            checkpoint_dir=ckdir)
+        tr.run_slot(SlotPlan(workers=4, steps=2))   # warm both ring programs
+        tr.run_slot(SlotPlan(workers=8, steps=2))   # (compile outside timing)
+        n_params = sum(x.size for x in jax.tree.leaves(tr.params))
+
+        def bench(fn, repeats={repeats}):
+            best = float("inf")
+            for _ in range(repeats):
+                tr.group.form(8)
+                tr.params = tr.group.reshard(tr.params)
+                tr.opt_state = tr.group.reshard(tr.opt_state)
+                jax.block_until_ready(tr.params)
+                t0 = time.perf_counter()
+                fn()
+                jax.block_until_ready(tr.params)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        def re_ring():                         # elastic path: reshard only
+            tr.group.re_ring(4)
+            tr.params = tr.group.reshard(tr.params)
+            tr.opt_state = tr.group.reshard(tr.opt_state)
+
+        def ckpt_preempt():                    # paper path: stop + restore
+            save_checkpoint(ckdir, params=tr.params,
+                            opt_state=tr.opt_state, step=tr.step)
+            tr.restore()
+            tr.group.form(4)
+            tr.params = tr.group.reshard(tr.params)
+            tr.opt_state = tr.group.reshard(tr.opt_state)
+
+        t_re = bench(re_ring)
+        t_ck = bench(ckpt_preempt)
+        print(f"ROW re_ring_w8to4 {{t_re:.6e}} n_params={{n_params}}")
+        print(f"ROW ckpt_preempt_w8to4 {{t_ck:.6e}} n_params={{n_params}}")
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"re_ring benchmark failed:\n{out.stderr[-2000:]}")
+    timed: Dict[str, float] = {}
+    for line in out.stdout.splitlines():
+        if not line.startswith("ROW "):
+            continue
+        _, name, seconds, extra = line.split(maxsplit=3)
+        timed[name] = float(seconds)
+        emit(f"re_ring/{name}", float(seconds) * 1e6,
+             f"seconds={float(seconds):.6e};{extra}")
+    if "re_ring_w8to4" in timed and "ckpt_preempt_w8to4" in timed:
+        ratio = timed["ckpt_preempt_w8to4"] / max(timed["re_ring_w8to4"],
+                                                  1e-12)
+        emit("re_ring/preempt_over_re_ring", 0.0, f"ratio={ratio:.3f}")
+
+
 def eq1_rar_time_model(full: bool = False) -> None:
     """§III-3 table: tau(w) for a 1.2B-param job on v5e constants."""
     prof = profile_from_arch(n_params=1.2e9, tokens_per_batch=4096 * 8)
@@ -232,6 +330,7 @@ FIGS = {
     "fig7": fig7_approx_ratio,
     "fig8": fig8_contention_sweep,
     "eq1": eq1_rar_time_model,
+    "re_ring": re_ring_cost,
 }
 
 # figures that compare schedulers and therefore honor --schedulers

@@ -2,9 +2,12 @@
 
 GADGET's per-slot decisions (ring size w per job) drive *actual* elastic
 ring-all-reduce data-parallel training of reduced-config models on host
-devices: each slot reshapes the DP mesh to the scheduled worker count,
-gradients flow through the paper's ppermute Share-Reduce/Share-Only ring,
-and preempted slots park the job on a checkpoint.
+devices, now through the execution-backend API: one ``OnlineDriver`` slot
+loop, a ``LiveBackend`` that binds each committed ring to its job's
+``ElasticTrainer``, a scripted mid-slot ``WorkerLeave`` that shrinks a ring
+in place (re-ring, no checkpoint restore), and measured step timings fed
+back through ``repro.cluster.calibrate`` so each job's Eq. (1) bandwidth
+tracks what the hardware actually delivers.
 
 Usage:  PYTHONPATH=src python examples/schedule_and_train.py
 (sets its own XLA_FLAGS before importing jax — run as its own process)
@@ -16,20 +19,22 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import tempfile
 
-import numpy as np
-
 from repro.cluster import make_fat_tree
-from repro.cluster.topology import ResourceState
-from repro.core.gadget import GadgetScheduler
-from repro.core.gvne import GvneConfig
-from repro.core.problem import DDLJSInstance, Job, ScheduleState
-from repro.sched import ContentionConfig, SchedulerContext
+from repro.core.problem import DDLJSInstance, Job
 from repro.core.rar_model import profile_from_arch
 from repro.core.utility import sqrt_utility
 from repro.configs import get_arch
 from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
-from repro.training.elastic import ElasticTrainer, SlotPlan
+from repro.sched import (
+    ContentionConfig,
+    LiveBackend,
+    OnlineDriver,
+    ScriptedEventStream,
+    WorkerLeave,
+    registry,
+)
+from repro.training.elastic import ElasticTrainer
 from repro.training.optimizer import make_optimizer
 
 ARCHS = ["qwen3-0.6b", "granite-3-2b", "rwkv6-7b"]
@@ -63,8 +68,6 @@ def main() -> None:
                           gpus_choices=(1, 2), seed=0)
     jobs = make_jobs()
     inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=SLOTS)
-    state = ScheduleState(inst)
-    scheduler = GadgetScheduler(GvneConfig(seed=0))
 
     trainers = {}
     for job in jobs:
@@ -78,33 +81,36 @@ def main() -> None:
             checkpoint_dir=tempfile.mkdtemp(prefix=f"job{job.id}_"))
 
     print(f"== GADGET driving elastic RAR training of {ARCHS} ==")
-    contention = ContentionConfig(oversubscription=OVERSUBSCRIPTION)
+    before = {j.id: j.profile.bandwidth for j in jobs}
+    backend = LiveBackend(trainers, steps_per_slot=STEPS_PER_SLOT)
+    driver = OnlineDriver(
+        inst,
+        contention=ContentionConfig(oversubscription=OVERSUBSCRIPTION),
+        # a scripted mid-slot departure: one of job 0's workers leaves in
+        # slot 3 and the ring re-forms around the survivors (no restore)
+        events=ScriptedEventStream(mid=[WorkerLeave(3, job_id=0, n=1)]),
+        backend=backend,
+    )
+    result = driver.run(registry.create("gadget", seed=0))
+
+    by_slot = {}
+    for row in backend.reports:
+        by_slot.setdefault(row["t"], {})[row["job_id"]] = row
     for t in range(SLOTS):
-        res = ResourceState(graph, oversubscription=OVERSUBSCRIPTION)
-        ctx = SchedulerContext(t=t, res=res, state=state,
-                               contention=contention)
-        decision = scheduler.schedule_slot(ctx)
-        # contention-aware pricing: a ring crossing an oversubscribed edge
-        # only gets its fair share of the link, so the slot delivers fewer
-        # steps (tau(b_i)/tau(b_eff) of the nominal progress, Eq. (1))
-        factors = {
-            e.job_id: ctx.contention_factor(e) for e in decision.embeddings
-        }
-        state.commit_slot(decision.embeddings,
-                          [factors[e.job_id] for e in decision.embeddings])
-        workers = {e.job_id: e.n_workers for e in decision.embeddings}
         line = []
         for job in jobs:
-            w = workers.get(job.id, 0)
             if t < job.arrival:
                 line.append(f"{job.arch}: not-arrived")
                 continue
-            f = factors.get(job.id, 1.0)
-            steps = max(1, round(STEPS_PER_SLOT * f)) if w else 0
-            out = trainers[job.id].run_slot(SlotPlan(workers=w, steps=steps))
-            tag = (f"w={w} loss={out['loss']:.3f}" +
-                   (f" contended(x{f:.2f})" if f < 0.999 else "")
-                   if w else "preempted(ckpt)")
+            row = by_slot.get(t, {}).get(job.id)
+            if row is None:
+                line.append(f"{job.arch}: preempted(ckpt)")
+                continue
+            tag = f"w={row['workers']} loss={row['loss']:.3f}"
+            if row.get("re_rings"):
+                tag += f" re-ring(x{row['re_rings']})"
+            if row["factor"] < 0.999:
+                tag += f" measured(x{row['factor']:.2f})"
             line.append(f"{job.arch}: {tag}")
         print(f" slot {t}: " + " | ".join(line))
 
@@ -113,10 +119,16 @@ def main() -> None:
         tr = trainers[job.id]
         first = tr.losses[0] if tr.losses else float("nan")
         last = tr.losses[-1] if tr.losses else float("nan")
+        cal = backend.calibrated.get(job.id)
+        cal_tag = (f", calibrated b {before[job.id]:.2e}->{cal:.2e} elem/s"
+                   if cal is not None else "")
         print(f"  {job.arch}: steps={tr.step} loss {first:.3f} -> {last:.3f} "
               f"(reshards={tr.resharding_events}, "
-              f"worker-time={state.z[job.id]:.0f})")
+              f"re-rings={tr.re_ring_events}, "
+              f"worker-time={result.state.z[job.id]:.1f}{cal_tag})")
         assert not tr.losses or last < first + 1e-6, "training should improve"
+    assert trainers[0].re_ring_events or not by_slot.get(3, {}).get(0), \
+        "the scripted WorkerLeave should have re-rung job 0's slot-3 ring"
 
 
 if __name__ == "__main__":

@@ -15,10 +15,15 @@ MPI DDL jobs):
     driving any scheduler under any cluster dynamics (the legacy
     ``run_offline_horizon`` and ``ClusterSimulator.run`` are thin
     deprecation shims over it);
+  * :mod:`repro.sched.backend`  — the :class:`ExecutionBackend` protocol
+    binding decisions to an executor: :class:`AnalyticBackend` (closed-form
+    pricing, the default) or :class:`LiveBackend` (real elastic JAX training
+    with measured progress and online bandwidth recalibration);
   * :mod:`repro.sched.registry` — schedulers resolved by name
     (``registry.create("gadget", seed=0)``).
 
-Writing a new scenario means writing an event generator, not forking a loop.
+Writing a new scenario means writing an event generator, not forking a loop;
+targeting a new execution substrate means writing a backend, not a driver.
 """
 
 from repro.sched.events import (  # noqa: F401
@@ -50,6 +55,13 @@ from repro.sched.api import (  # noqa: F401
     SlotRecord,
     as_scheduler,
     contention_factor,
+)
+from repro.sched.backend import (  # noqa: F401
+    AnalyticBackend,
+    ExecutionBackend,
+    LiveBackend,
+    SlotExecution,
+    SlotOutcome,
 )
 from repro.sched.driver import OnlineDriver  # noqa: F401
 from repro.sched import registry  # noqa: F401

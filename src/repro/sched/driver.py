@@ -10,13 +10,26 @@ this class) used to hardwire:
     applied and delivered to ``scheduler.on_event`` *before* the decision;
     mid-slot events (the failure wave, scripted membership changes) strike
     *after* placement;
-  * pricing: mid-slot failures void a ring's slot progress, stragglers run a
-    synchronous ring at its slowest member, contention re-prices rings at
-    their fair-share effective bandwidth (tau(b_i)/tau(b_eff), Eq. (1)), and
-    a mid-slot WorkerLeave credits only the surviving fraction of the ring;
   * accounting: one ``ScheduleState.commit_slot(embeddings, factors)`` call
     per slot (the z_{i,t} update, Algorithm 1 line 6), the per-slot
     :class:`SlotRecord`, and the typed event log.
+
+*Execution* — what a committed slot actually delivers — is delegated to an
+:class:`~repro.sched.backend.ExecutionBackend`:
+
+    outcome = backend.execute_slot(decision, SlotExecution(ctx, wave, left))
+
+The backend receives the scheduler's decision plus the mid-slot view (the
+failure wave, departed workers) and returns one progress factor per
+embedding; the driver commits those factors verbatim. The default
+:class:`~repro.sched.backend.AnalyticBackend` reproduces the paper's
+closed-form pricing — mid-slot failures void a ring's slot progress,
+stragglers run a synchronous ring at its slowest member, contention
+re-prices rings at their fair-share effective bandwidth
+(tau(b_i)/tau(b_eff), Eq. (1)), and a mid-slot WorkerLeave credits only the
+surviving fraction of the ring. :class:`~repro.sched.backend.LiveBackend`
+instead runs each scheduled job's :class:`~repro.training.elastic.
+ElasticTrainer` for the slot and reports *measured* progress.
 
 With faults and contention off the driver is bit-identical to the plain
 horizon loop; with the default :class:`FaultEventStream` it is bit-identical
@@ -38,6 +51,11 @@ from repro.sched.api import (
     SimResult,
     SlotRecord,
     as_scheduler,
+)
+from repro.sched.backend import (
+    AnalyticBackend,
+    ExecutionBackend,
+    SlotExecution,
 )
 from repro.sched.events import (
     ClusterEvent,
@@ -63,6 +81,14 @@ class OnlineDriver:
     pass a :class:`ScriptedEventStream` / :class:`CompositeEventStream` for
     bespoke scenarios. The stream is ``reset()`` at the start of every run,
     so one driver replays identically across runs (same seed, same result).
+
+    ``backend`` selects the slot executor (default
+    :class:`~repro.sched.backend.AnalyticBackend`); pass a
+    :class:`~repro.sched.backend.LiveBackend` to bind decisions to real
+    elastic training. Note the replay guarantee above is stated for the
+    analytic backend: a live run measures wall time and (with its default
+    ``calibrate=True``) refits the instance's job profiles in place — see
+    :class:`~repro.sched.backend.LiveBackend` for the replay caveats.
     """
 
     def __init__(
@@ -72,6 +98,7 @@ class OnlineDriver:
         faults: Optional[FaultConfig] = None,
         contention: Optional[ContentionConfig] = None,
         events: Optional[EventStream] = None,
+        backend: Optional[ExecutionBackend] = None,
     ):
         if faults is not None and events is not None:
             raise ValueError(
@@ -86,6 +113,7 @@ class OnlineDriver:
         self.events = events if events is not None else FaultEventStream(
             [s.id for s in inst.graph.servers], self.faults
         )
+        self.backend = backend if backend is not None else AnalyticBackend()
 
     def run(self, scheduler: Union[Scheduler, str, None] = None) -> SimResult:
         if scheduler is None:
@@ -164,41 +192,29 @@ class OnlineDriver:
                 log.append(ev)
                 sched.on_event(ev, ctx)
 
-            # -- pricing + accounting
-            committed: List[Embedding] = []
-            factors: List[float] = []
-            contention_factors: List[float] = []
-            effective = 0.0
-            placed = 0
-            lost = 0
-            for e in decision.embeddings:
+            # -- execution (analytic pricing or real training) + accounting
+            committed: List[Embedding] = list(decision.embeddings)
+            for e in committed:
                 assert e.job_id in res.committed, \
                     "scheduler must commit embeddings"
+            outcome = self.backend.execute_slot(
+                decision,
+                SlotExecution(ctx=ctx, wave=frozenset(wave), left=left),
+            )
+            if len(outcome.factors) != len(committed):
+                raise ValueError(
+                    f"{getattr(self.backend, 'name', self.backend)!r} "
+                    f"backend returned {len(outcome.factors)} factors for "
+                    f"{len(committed)} embeddings"
+                )
+            placed = 0
+            effective = 0.0
+            for e, factor in zip(committed, outcome.factors):
                 placed += e.n_workers
-                if any(s in wave for s in e.servers):
-                    factor = 0.0  # slot progress lost; job restarts from ckpt
-                    lost += 1
-                else:
-                    # straggler: synchronous ring runs at slowest member
-                    factor = 1.0
-                    for s in e.servers:
-                        if s in ctx.straggling:
-                            factor = min(factor, ctx.straggling[s])
-                    if e.job_id in left and e.n_workers > 0:
-                        # mid-slot leave: only the surviving fraction of the
-                        # ring's worker-time is credited (re-ring next slot)
-                        factor *= max(
-                            0.0, (e.n_workers - left[e.job_id]) / e.n_workers
-                        )
-                    cf = ctx.contention_factor(e)
-                    contention_factors.append(cf)
-                    factor *= cf
-                committed.append(e)
-                factors.append(factor)
                 effective += factor * e.n_workers
                 log.append(EmbeddingCommitted(t, e.job_id, e.n_workers))
             # z + history accounting via the single shared path
-            state.commit_slot(committed, factors)
+            state.commit_slot(committed, outcome.factors)
 
             for j in inst.jobs:
                 if completion[j.id] is None and state.remaining(j) <= 1e-9:
@@ -224,11 +240,11 @@ class OnlineDriver:
                     failed_servers=len(failed),
                     max_edge_contention=res.max_edge_contention(),
                     mean_contention_factor=(
-                        float(np.mean(contention_factors))
-                        if contention_factors
+                        float(np.mean(outcome.contention_factors))
+                        if outcome.contention_factors
                         else 1.0
                     ),
-                    lost_embeddings=lost,
+                    lost_embeddings=outcome.lost,
                 )
             )
         return SimResult(

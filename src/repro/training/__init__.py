@@ -9,3 +9,9 @@ from repro.training.optimizer import (  # noqa: F401
 )
 from repro.training.train_step import make_ring_train_step, make_train_step  # noqa: F401
 from repro.training.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.training.elastic import (  # noqa: F401
+    ElasticTrainer,
+    RingWorkerGroup,
+    SlotPlan,
+    largest_feasible_ring,
+)

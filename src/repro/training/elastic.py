@@ -2,10 +2,29 @@
 counts.
 
 GADGET reallocates workers between slots (preemptive jobs, §IV). The trainer
-maps worker count w -> DP degree: between slots it rebuilds the mesh over the
+maps worker count w -> DP degree: between slots it reforms the ring over the
 first w devices, reshards params/optimizer (device_put — same bytes, new
-layout), rescales the LR linearly with the global batch, and continues from
-the exact step. A slot with w=0 parks the job (checkpoint only).
+layout), and continues from the exact step. A slot with w=0 parks the job
+(checkpoint only).
+
+Two layers:
+
+  * :class:`RingWorkerGroup` — the reusable ring substrate: owns the mesh and
+    a compiled-step cache keyed by ``(workers, mode)`` so back-to-back slots
+    at the same ring size reuse the jitted executable instead of re-tracing,
+    and exposes :meth:`RingWorkerGroup.re_ring` — reform the ring over the
+    surviving workers *mid-slot* (a ``device_put`` reshard onto the smaller
+    mesh; the survivors already hold full replicas, so no checkpoint restore
+    is involved).
+  * :class:`ElasticTrainer` — per-job training state (params, optimizer,
+    step counter, loss history) driven slot-by-slot through the group. A
+    :class:`SlotPlan` may carry a scripted mid-slot ``leave``; the trainer
+    then re-rings and finishes the slot on the survivors at the same global
+    batch.
+
+Worker counts are clamped to the largest divisor of ``global_batch`` that
+fits the device count (:func:`largest_feasible_ring`): a non-divisor DP
+degree would shard the ``P("data")`` batch axis unevenly, which XLA rejects.
 
 The data pipeline is step-indexed and deterministic, so token order is
 independent of the DP degree (verified in tests): elasticity changes
@@ -15,25 +34,160 @@ throughput, never the training trajectory at fixed global batch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.dist.sharding import ShardingRules, make_rules, param_shardings
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
 from repro.training.optimizer import Optimizer
 from repro.training.train_step import make_ring_train_step
 
 
+def largest_feasible_ring(requested: int, *, global_batch: int,
+                          n_devices: int) -> int:
+    """Largest ring size <= ``requested`` that divides ``global_batch`` and
+    fits on ``n_devices`` (0 when ``requested`` <= 0).
+
+    The DP degree must divide the global batch: ``P("data")`` shards the
+    batch axis evenly or not at all, so e.g. ``global_batch=8, workers=3``
+    clamps to 2 (the largest divisor of 8 that is <= 3).
+    """
+    w = min(int(requested), int(n_devices), int(global_batch))
+    if w <= 0:
+        return 0
+    while global_batch % w:
+        w -= 1
+    return w
+
+
 @dataclasses.dataclass
 class SlotPlan:
-    """One scheduler decision: train for ``steps`` with ``workers`` workers."""
+    """One scheduler decision: train for ``steps`` with ``workers`` workers.
+
+    ``leave=(after, n)`` scripts a mid-slot membership change: after ``after``
+    completed steps, ``n`` workers depart and the slot finishes on the
+    survivors via :meth:`RingWorkerGroup.re_ring` (same global batch, no
+    checkpoint restore).
+    """
 
     workers: int
     steps: int
+    leave: Optional[Tuple[int, int]] = None
+
+
+@dataclasses.dataclass
+class _RingProgram:
+    """One compiled ring configuration: mesh + jitted step + shardings."""
+
+    mesh: Mesh
+    step_fn: object              # jitted shard_map train step
+    replicated: NamedSharding    # P() over the mesh (params / opt state)
+    batch_sharding: NamedSharding  # P("data") over the mesh
+
+
+class RingWorkerGroup:
+    """Mesh + compiled-step cache for one job's elastic ring.
+
+    The cache is keyed by ``(workers, mode)``; ``compile_count`` counts cache
+    misses (each miss builds a fresh ``jax.jit(jax.shard_map(...))`` — the
+    expensive trace/compile path), so equal-sized back-to-back slots can be
+    asserted to reuse the executable.
+    """
+
+    def __init__(self, model, optimizer: Optimizer, *, global_batch: int,
+                 lr: float, mode: str = "ring"):
+        self.model = model
+        self.optimizer = optimizer
+        self.global_batch = global_batch
+        self.lr = lr
+        self.mode = mode
+        self.workers = 0                 # current ring size (0 = unformed)
+        self.compile_count = 0           # compiled-step cache misses
+        self._programs: Dict[Tuple[int, str], _RingProgram] = {}
+        self._warm: set = set()          # keys whose step_fn has run >= once
+
+    # -- ring formation -----------------------------------------------------
+    def resolve_workers(self, requested: int) -> int:
+        """Clamp a requested worker count to a feasible ring size."""
+        return largest_feasible_ring(requested,
+                                     global_batch=self.global_batch,
+                                     n_devices=len(jax.devices()))
+
+    def form(self, workers: int) -> int:
+        """Form (or re-form) the ring at the clamped size; returns it."""
+        w = self.resolve_workers(workers)
+        if w <= 0:
+            raise ValueError(f"cannot form a ring for workers={workers}")
+        self._program(w)
+        self.workers = w
+        return w
+
+    def re_ring(self, survivors: int) -> int:
+        """Reform the ring over ``survivors`` workers mid-slot.
+
+        This is the elastic shrink/grow path: the new mesh spans the first
+        ``survivors`` devices, and because params/opt state are replicated
+        over the data axis, moving onto it is a plain ``device_put`` reshard
+        (see :meth:`reshard`) — no checkpoint restore, no lost progress.
+        """
+        return self.form(max(1, survivors))
+
+    def _program(self, w: int) -> _RingProgram:
+        key = (w, self.mode)
+        prog = self._programs.get(key)
+        if prog is None:
+            mesh = Mesh(np.array(jax.devices()[:w]), ("data",))
+            step_fn = make_ring_train_step(self.model, self.optimizer, "data",
+                                           lr=self.lr, mode=self.mode)
+            smapped = jax.jit(jax.shard_map(
+                step_fn, mesh=mesh,
+                in_specs=(P(), P(), P("data")),
+                out_specs=(P(), P(), P()),
+                check_vma=False,
+            ))
+            prog = _RingProgram(
+                mesh=mesh,
+                step_fn=smapped,
+                replicated=NamedSharding(mesh, P()),
+                batch_sharding=NamedSharding(mesh, P("data")),
+            )
+            self._programs[key] = prog
+            self.compile_count += 1
+        return prog
+
+    # -- execution over the current ring ------------------------------------
+    @property
+    def _current(self) -> _RingProgram:
+        if self.workers <= 0:
+            raise RuntimeError("ring not formed; call form() first")
+        return self._programs[(self.workers, self.mode)]
+
+    def reshard(self, tree):
+        """Replicate a pytree over the current mesh (elastic reshard: same
+        bytes, new device set)."""
+        return jax.device_put(tree, self._current.replicated)
+
+    def shard_batch(self, batch):
+        """Split a global batch across the current ring's data axis."""
+        sh = self._current.batch_sharding
+        return jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), sh),
+                            batch)
+
+    @property
+    def warm(self) -> bool:
+        """True once the current ring's step has executed at least once —
+        i.e. its wall time no longer includes the trace/compile."""
+        return (self.workers, self.mode) in self._warm
+
+    def step(self, params, opt_state, batch):
+        """Run one compiled train step over the current ring."""
+        out = self._current.step_fn(params, opt_state, batch)
+        self._warm.add((self.workers, self.mode))
+        return out
 
 
 class ElasticTrainer:
@@ -49,55 +203,77 @@ class ElasticTrainer:
         self.base_lr = base_lr
         self.mode = mode
         self.checkpoint_dir = checkpoint_dir
+        self.group = RingWorkerGroup(model, optimizer,
+                                     global_batch=global_batch,
+                                     lr=base_lr,  # fixed global batch =>
+                                     mode=mode)   # fixed LR (w splits only)
         self.params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
         self.opt_state = optimizer.init(self.params)
         self.step = 0
         self.losses: List[float] = []
-        self.resharding_events = 0
+        self.resharding_events = 0   # slot-boundary mesh changes
+        self.re_ring_events = 0      # mid-slot re-rings (no ckpt restore)
+        self.restores = 0            # checkpoint restores (failure recovery)
 
-    def _mesh_for(self, workers: int) -> Mesh:
-        devs = np.array(jax.devices()[:workers])
-        return Mesh(devs, ("data",))
+    def _reshard_state(self) -> None:
+        self.params = self.group.reshard(self.params)
+        self.opt_state = self.group.reshard(self.opt_state)
 
     def run_slot(self, plan: SlotPlan) -> Dict[str, float]:
+        """Execute one slot; returns measured outcomes.
+
+        Keys: ``steps`` (executed), ``loss`` (last), ``workers`` (initial
+        clamped ring size), ``worker_steps`` (sum of ring size over executed
+        steps — the measured worker-time numerator), ``timings`` (ring size
+        -> best wall seconds/step), ``re_rings`` (mid-slot re-rings).
+        """
         if plan.workers <= 0:
             if self.checkpoint_dir:
                 save_checkpoint(self.checkpoint_dir, params=self.params,
                                 opt_state=self.opt_state, step=self.step)
             return {"steps": 0, "loss": float("nan")}
-        w = min(plan.workers, len(jax.devices()),
-                self.global_batch)  # DP degree cannot exceed batch
-        mesh = self._mesh_for(w)
-        repl = NamedSharding(mesh, P())
-        batch_shard = NamedSharding(mesh, P("data"))
-        # elastic reshard: same bytes, new mesh
-        self.params = jax.device_put(self.params, repl)
-        self.opt_state = jax.device_put(self.opt_state, repl)
+        w = self.group.form(plan.workers)
+        self._reshard_state()
         self.resharding_events += 1
-        lr = self.base_lr  # fixed global batch => fixed LR (w changes split only)
 
-        step_fn = make_ring_train_step(self.model, self.optimizer, "data",
-                                       lr=lr, mode=self.mode)
-        smapped = jax.jit(jax.shard_map(
-            step_fn, mesh=mesh,
-            in_specs=(P(), P(), P("data")),
-            out_specs=(P(), P(), P()),
-            check_vma=False,
-        ))
+        segments: List[Tuple[int, int]] = [(w, plan.steps)]
+        if plan.leave is not None:
+            after, n_leave = plan.leave
+            after = max(0, min(int(after), plan.steps))
+            survivors = self.group.resolve_workers(max(1, w - int(n_leave)))
+            segments = [(w, after), (survivors, plan.steps - after)]
+
         loss = float("nan")
-        for _ in range(plan.steps):
-            batch = self.data.batch(self.step)   # step-indexed: elastic-safe
-            batch = jax.tree.map(
-                lambda x: jax.device_put(jnp.asarray(x), batch_shard), batch)
-            self.params, self.opt_state, metrics = smapped(
-                self.params, self.opt_state, batch)
-            loss = float(metrics["loss"])
-            self.losses.append(loss)
-            self.step += 1
+        worker_steps = 0
+        re_rings = 0
+        timings: Dict[int, float] = {}
+        for idx, (seg_w, seg_steps) in enumerate(segments):
+            if idx > 0:
+                seg_w = self.group.re_ring(seg_w)
+                self._reshard_state()
+                self.re_ring_events += 1
+                re_rings += 1
+            for _ in range(seg_steps):
+                batch = self.data.batch(self.step)  # step-indexed: elastic-safe
+                batch = self.group.shard_batch(batch)
+                was_warm = self.group.warm
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.group.step(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])  # sync: timing covers the step
+                dt = time.perf_counter() - t0
+                if was_warm:  # a cold step times the trace/compile, not the
+                    # ring — never report it (it would poison calibration)
+                    timings[seg_w] = min(timings.get(seg_w, float("inf")), dt)
+                self.losses.append(loss)
+                self.step += 1
+                worker_steps += seg_w
         if self.checkpoint_dir:
             save_checkpoint(self.checkpoint_dir, params=self.params,
                             opt_state=self.opt_state, step=self.step)
-        return {"steps": plan.steps, "loss": loss, "workers": w}
+        return {"steps": plan.steps, "loss": loss, "workers": w,
+                "worker_steps": worker_steps, "timings": timings,
+                "re_rings": re_rings}
 
     def restore(self) -> bool:
         if not self.checkpoint_dir:
@@ -109,4 +285,5 @@ class ElasticTrainer:
         self.params = jax.tree.map(jnp.asarray, params)
         self.opt_state = jax.tree.map(jnp.asarray, opt)
         self.step = step
+        self.restores += 1
         return True

@@ -1,0 +1,418 @@
+"""Execution-backend tests (ISSUE 4).
+
+Covers the driver<->backend contract without multi-device jax:
+
+  * the default backend is AnalyticBackend and is bit-identical to the
+    pre-refactor inline pricing (the golden tests in test_sched_api pin the
+    reference loop; here we pin that an explicit AnalyticBackend equals the
+    default under faults + contention + scripted membership changes);
+  * a custom backend sees every slot's decision plus the mid-slot view
+    (failure wave, departed workers) and its factors drive commit_slot;
+  * malformed outcomes (wrong factor count) are rejected;
+  * the divisor worker clamp (satellite: global_batch=8, workers=3 -> 2);
+  * LiveBackend semantics against stub trainers: measured-progress credit,
+    WorkerLeave -> re_ring plan (no restore), failure wave -> checkpoint
+    restore + voided slot, and the online bandwidth recalibration loop
+    through repro.cluster.calibrate.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster import make_fat_tree
+from repro.cluster.topology import Embedding, Link, ResourceState, Server, \
+    SubstrateGraph
+from repro.cluster.trace import JobTraceConfig, generate_jobs
+from repro.core.gadget import GadgetScheduler
+from repro.core.gvne import GvneConfig
+from repro.core.problem import DDLJSInstance, Job
+from repro.core.rar_model import RarJobProfile
+from repro.core.utility import sqrt_utility
+from repro.sched import (
+    AnalyticBackend,
+    ContentionConfig,
+    ExecutionBackend,
+    FaultConfig,
+    LiveBackend,
+    OnlineDriver,
+    SchedulerBase,
+    ScriptedEventStream,
+    ServerFailure,
+    SlotDecision,
+    SlotOutcome,
+    StragglerOnset,
+    WorkerLeave,
+)
+from repro.training.elastic import largest_feasible_ring
+
+
+@pytest.fixture(scope="module")
+def instance():
+    graph = make_fat_tree(n_servers=8, seed=3)
+    jobs = generate_jobs(JobTraceConfig(n_jobs=8, horizon=12, seed=4))
+    return DDLJSInstance(graph=graph, jobs=jobs, horizon=12)
+
+
+def _one_job_instance(horizon=3, budget=8.0, profile=None):
+    servers = [Server(0, 0, {"gpus": 4.0}), Server(1, 0, {"gpus": 4.0})]
+    links = []
+    for s in servers:
+        links.append(Link(s.node, "r0", 100.0))
+        links.append(Link("r0", s.node, 100.0))
+    graph = SubstrateGraph(servers, links, n_racks=1, n_core=0)
+    job = Job(id=0, arrival=0, max_workers=2, demands={"gpus": 1.0},
+              budgets={"gpus": budget}, bandwidth=1.0, zeta=1.0,
+              utility=sqrt_utility(1.0), profile=profile)
+    return DDLJSInstance(graph=graph, jobs=[job], horizon=horizon)
+
+
+class ColocTwo(SchedulerBase):
+    """Places a colocated 2-worker ring for job 0 whenever it is active."""
+
+    name = "coloc2"
+
+    def decide(self, ctx):
+        embeddings = []
+        for job in ctx.active_jobs():
+            emb = Embedding(job.id, [(0, 2)], [], job.bandwidth)
+            if ctx.res.feasible(emb, job.demands):
+                ctx.res.commit(emb, job.demands)
+                embeddings.append(emb)
+        return SlotDecision(ctx.t, embeddings, 0.0, 0.0,
+                            len(ctx.active_jobs()), len(embeddings))
+
+
+# ---------------------------------------------------------------------------
+# the driver<->backend contract
+# ---------------------------------------------------------------------------
+
+def test_default_backend_is_analytic(instance):
+    assert isinstance(OnlineDriver(instance).backend, AnalyticBackend)
+    assert isinstance(AnalyticBackend(), ExecutionBackend)
+    assert isinstance(LiveBackend({}), ExecutionBackend)
+
+
+def test_explicit_analytic_backend_is_bit_identical(instance):
+    """backend=AnalyticBackend() must not perturb any accounting under
+    faults, stragglers, and contention (same seed, exact equality)."""
+    faults = FaultConfig(server_fail_prob=0.2, repair_prob=0.4,
+                         straggler_prob=0.3, seed=9)
+    contention = ContentionConfig(oversubscription=1.5)
+    a = OnlineDriver(instance, faults=faults, contention=contention).run(
+        GadgetScheduler(GvneConfig(seed=0)))
+    b = OnlineDriver(instance, faults=faults, contention=contention,
+                     backend=AnalyticBackend()).run(
+        GadgetScheduler(GvneConfig(seed=0)))
+    assert a.state.z == b.state.z
+    assert a.records == b.records
+    assert a.events == b.events
+
+
+def test_backend_sees_every_slot_and_midslot_view():
+    inst = _one_job_instance(horizon=3)
+    seen = []
+
+    class Recording(AnalyticBackend):
+        name = "recording"
+
+        def execute_slot(self, decision, execution):
+            seen.append((execution.t, set(execution.wave),
+                         dict(execution.left), len(decision.embeddings)))
+            return super().execute_slot(decision, execution)
+
+    OnlineDriver(
+        inst,
+        events=ScriptedEventStream(mid=[WorkerLeave(1, job_id=0, n=1),
+                                        ServerFailure(2, server_id=0)]),
+        backend=Recording(),
+    ).run(ColocTwo())
+    assert [s[0] for s in seen] == [0, 1, 2]
+    assert seen[0] == (0, set(), {}, 1)
+    assert seen[1] == (1, set(), {0: 1}, 1)
+    assert seen[2] == (2, {0}, {}, 1)
+
+
+def test_backend_factors_drive_commit_slot():
+    inst = _one_job_instance(horizon=2)
+
+    class HalfCredit:
+        name = "half"
+
+        def execute_slot(self, decision, execution):
+            return SlotOutcome(factors=[0.5] * len(decision.embeddings))
+
+    out = OnlineDriver(inst, backend=HalfCredit()).run(ColocTwo())
+    # 2 workers x 2 slots at half credit -> z = 2.0 (full credit would be 4)
+    assert out.state.z[0] == pytest.approx(2.0)
+    assert all(r.effective_worker_time == pytest.approx(1.0)
+               for r in out.records)
+
+
+def test_backend_factor_count_mismatch_raises():
+    inst = _one_job_instance(horizon=1)
+
+    class Broken:
+        name = "broken"
+
+        def execute_slot(self, decision, execution):
+            return SlotOutcome(factors=[])  # wrong arity
+
+    with pytest.raises(ValueError, match="broken.*factors"):
+        OnlineDriver(inst, backend=Broken()).run(ColocTwo())
+
+
+# ---------------------------------------------------------------------------
+# worker clamp (satellite)
+# ---------------------------------------------------------------------------
+
+def test_largest_feasible_ring_clamps_to_divisor():
+    assert largest_feasible_ring(3, global_batch=8, n_devices=8) == 2
+    assert largest_feasible_ring(5, global_batch=8, n_devices=8) == 4
+    assert largest_feasible_ring(8, global_batch=8, n_devices=8) == 8
+    assert largest_feasible_ring(9, global_batch=8, n_devices=8) == 8
+    assert largest_feasible_ring(4, global_batch=6, n_devices=8) == 3
+    assert largest_feasible_ring(4, global_batch=8, n_devices=2) == 2
+    assert largest_feasible_ring(0, global_batch=8, n_devices=8) == 0
+    assert largest_feasible_ring(-1, global_batch=8, n_devices=8) == 0
+    # every result divides the batch
+    for gb in (6, 8, 12):
+        for r in range(1, 16):
+            w = largest_feasible_ring(r, global_batch=gb, n_devices=8)
+            assert w == 0 or gb % w == 0
+
+
+# ---------------------------------------------------------------------------
+# LiveBackend semantics against stub trainers (no multi-device jax needed)
+# ---------------------------------------------------------------------------
+
+class StubTrainer:
+    """Duck-typed ElasticTrainer: replays the run_slot contract."""
+
+    def __init__(self, timings_by_call=()):
+        self.params = {"w": np.zeros(100, np.float32)}
+        self.plans = []
+        self.restores = 0
+        self.step = 0
+        self._timings = list(timings_by_call)
+
+    def run_slot(self, plan):
+        self.plans.append(plan)
+        w = plan.workers
+        if plan.leave is not None:
+            after, n = plan.leave
+            worker_steps = after * w + (plan.steps - after) * max(1, w - n)
+            re_rings = 1
+        else:
+            worker_steps = plan.steps * w
+            re_rings = 0
+        self.step += plan.steps
+        idx = len(self.plans) - 1
+        timings = self._timings[idx] if idx < len(self._timings) else {}
+        return {"steps": plan.steps, "loss": 1.0, "workers": w,
+                "worker_steps": worker_steps, "timings": timings,
+                "re_rings": re_rings}
+
+    def restore(self):
+        self.restores += 1
+        return True
+
+
+def test_live_backend_full_slot_gets_full_credit():
+    inst = _one_job_instance(horizon=2)
+    tr = StubTrainer()
+    backend = LiveBackend({0: tr}, steps_per_slot=4, calibrate=False)
+    out = OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert out.state.z[0] == pytest.approx(4.0)  # 2 workers x 2 slots
+    assert tr.step == 8
+    assert tr.restores == 0
+    assert all(r["factor"] == pytest.approx(1.0) for r in backend.reports)
+
+
+def test_live_backend_worker_leave_re_rings_without_restore():
+    inst = _one_job_instance(horizon=1)
+    tr = StubTrainer()
+    backend = LiveBackend({0: tr}, steps_per_slot=4, calibrate=False)
+    out = OnlineDriver(
+        inst, events=ScriptedEventStream(mid=[WorkerLeave(0, job_id=0, n=1)]),
+        backend=backend,
+    ).run(ColocTwo())
+    assert tr.restores == 0                      # re-ring, not recovery
+    assert tr.plans[0].leave == (2, 1)           # half the slot, then shrink
+    # measured credit: 2 steps at w=2 + 2 steps at w=1 over nominal 4x2
+    assert out.state.z[0] == pytest.approx(6.0 / 8.0 * 2.0)
+    assert backend.reports[0]["re_rings"] == 1
+
+
+def test_live_backend_failure_wave_restores_checkpoint():
+    inst = _one_job_instance(horizon=2)
+    tr = StubTrainer()
+    backend = LiveBackend({0: tr}, steps_per_slot=4, calibrate=False)
+    out = OnlineDriver(
+        inst, events=ScriptedEventStream(mid=[ServerFailure(0, server_id=0)]),
+        backend=backend,
+    ).run(ColocTwo())
+    assert tr.restores == 1
+    assert out.records[0].lost_embeddings == 1
+    assert out.records[0].effective_worker_time == 0.0
+    # server stays failed -> nothing scheduled at slot 1
+    assert out.records[1].n_embedded == 0
+    assert out.state.z[0] == 0.0
+
+
+def test_live_backend_straggler_throttles_submitted_steps():
+    inst = _one_job_instance(horizon=1)
+    tr = StubTrainer()
+    backend = LiveBackend({0: tr}, steps_per_slot=4, calibrate=False)
+    out = OnlineDriver(
+        inst,
+        events=ScriptedEventStream(
+            pre=[StragglerOnset(0, server_id=0, factor=0.5)]),
+        backend=backend,
+    ).run(ColocTwo())
+    assert tr.plans[0].steps == 2                # 4 * 0.5
+    assert out.state.z[0] == pytest.approx(1.0)  # measured: 2/4 of 2 workers
+
+
+def test_live_backend_one_step_slot_leave_runs_on_survivors():
+    """A slot throttled to one step with a mid-slot leave runs that step on
+    the survivors (after=0) — the departure still costs credited time."""
+    inst = _one_job_instance(horizon=1)
+    tr = StubTrainer()
+    backend = LiveBackend({0: tr}, steps_per_slot=4, calibrate=False)
+    out = OnlineDriver(
+        inst,
+        events=ScriptedEventStream(
+            pre=[StragglerOnset(0, server_id=0, factor=0.25)],
+            mid=[WorkerLeave(0, job_id=0, n=1)]),
+        backend=backend,
+    ).run(ColocTwo())
+    assert tr.plans[0].steps == 1
+    assert tr.plans[0].leave == (0, 1)
+    # the single step runs on the 1 survivor: worker_steps=1 over nominal 4x2
+    assert out.state.z[0] == pytest.approx(0.25)
+
+
+def test_live_backend_whole_ring_departure_restores_with_zero_credit():
+    """WorkerLeave with n >= ring size: no survivors to re-ring over — the
+    live path restores the checkpoint and credits 0, matching the analytic
+    surviving-fraction-0 semantics (it must NOT train on departed hosts)."""
+    inst = _one_job_instance(horizon=1)
+    tr = StubTrainer()
+    backend = LiveBackend({0: tr}, steps_per_slot=4, calibrate=False)
+    out = OnlineDriver(
+        inst, events=ScriptedEventStream(mid=[WorkerLeave(0, job_id=0, n=2)]),
+        backend=backend,
+    ).run(ColocTwo())
+    assert tr.restores == 1
+    assert tr.plans == []            # nothing ran on the departed ring
+    assert out.state.z[0] == 0.0
+    # analytic backend agrees exactly on the credited factor
+    ref = OnlineDriver(
+        inst, events=ScriptedEventStream(mid=[WorkerLeave(0, job_id=0, n=2)])
+    ).run(ColocTwo())
+    assert ref.state.z[0] == out.state.z[0]
+
+
+def test_live_backend_restore_profiles_undoes_calibration():
+    b_true, d = 1e6, 100
+    prof = RarJobProfile(d=float(d), bandwidth=4e6, reduce_speed=float("inf"),
+                         t_fwd_per_sample=0.0, t_bwd=0.0, batch_size=8.0)
+    inst = _one_job_instance(horizon=2, profile=prof)
+
+    def secs(w):
+        return d * (w - 1.0) / w * 2.0 / b_true
+
+    tr = StubTrainer(timings_by_call=[{2: secs(2)}, {4: secs(4)}] * 2)
+    backend = LiveBackend({0: tr}, steps_per_slot=4)
+    OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert inst.jobs[0].profile is not prof   # refit mutated the instance
+    backend.restore_profiles()
+    assert inst.jobs[0].profile is prof       # snapshot restored
+    assert backend.calibrated == {}
+    # stale samples/reports are dropped too, else the next run's first slot
+    # would instantly refit from the previous run's measurements
+    assert backend.samples == {} and backend.reports == []
+    OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert inst.jobs[0].profile.bandwidth == pytest.approx(b_true, rel=1e-6)
+
+
+def test_live_backend_jobs_without_trainer_price_analytically():
+    inst = _one_job_instance(horizon=1)
+    backend = LiveBackend({}, steps_per_slot=4)
+    out = OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert out.state.z[0] == pytest.approx(2.0)  # plain analytic credit
+    assert backend.reports == []
+
+
+def test_live_backend_recalibrates_profile_bandwidth():
+    """Measured timings spanning two ring sizes refit job.profile.bandwidth
+    through repro.cluster.calibrate (the feedback layer)."""
+    b_true = 1e6  # elements/sec
+    d = 100       # StubTrainer param count
+    prof = RarJobProfile(d=float(d), bandwidth=4e6, reduce_speed=float("inf"),
+                         t_fwd_per_sample=0.0, t_bwd=0.0, batch_size=8.0)
+    inst = _one_job_instance(horizon=2, profile=prof)
+
+    def secs(w):  # exact Eq. (1) comm time at b_true, zero overhead
+        return d * (w - 1.0) / w * 2.0 / b_true
+
+    tr = StubTrainer(timings_by_call=[{2: secs(2)}, {4: secs(4)}])
+    backend = LiveBackend({0: tr}, steps_per_slot=4)
+    OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert 0 in backend.calibrated
+    assert inst.jobs[0].profile.bandwidth == pytest.approx(b_true, rel=1e-6)
+    assert inst.jobs[0].profile.bandwidth != prof.bandwidth
+    worlds = {s.world for s in backend.samples[0]}
+    assert worlds == {2, 4}
+
+
+def test_live_backend_calibration_subtracts_modeled_compute():
+    """With a credible compute model, only the residual is attributed to
+    the wire — raw step times would make the slope negative here and the
+    refit would never fire."""
+    b_true, d, c_fwd, t_bwd, gb = 1e6, 100, 1e-3, 1e-3, 8
+    prof = RarJobProfile(d=float(d), bandwidth=4e6, reduce_speed=float("inf"),
+                         t_fwd_per_sample=c_fwd, t_bwd=t_bwd, batch_size=8.0)
+    inst = _one_job_instance(horizon=2, profile=prof)
+
+    def secs(w):  # comm + per-worker compute, exactly as a step measures
+        return d * (w - 1.0) / w * 2.0 / b_true + c_fwd * gb / w + t_bwd
+
+    tr = StubTrainer(timings_by_call=[{2: secs(2)}, {4: secs(4)}])
+    tr.global_batch = gb
+    backend = LiveBackend({0: tr}, steps_per_slot=4)
+    OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert inst.jobs[0].profile.bandwidth == pytest.approx(b_true, rel=1e-6)
+
+
+def test_live_backend_calibration_ignores_inconsistent_compute_model():
+    """A compute model bigger than the measurement (full-scale profile vs a
+    reduced stand-in) is not subtracted — the whole step goes to the wire
+    and calibration still fires."""
+    b_true, d = 1e6, 100
+    prof = RarJobProfile(d=float(d), bandwidth=4e6, reduce_speed=float("inf"),
+                         t_fwd_per_sample=0.0, t_bwd=10.0, batch_size=8.0)
+    inst = _one_job_instance(horizon=2, profile=prof)
+
+    def secs(w):
+        return d * (w - 1.0) / w * 2.0 / b_true
+
+    tr = StubTrainer(timings_by_call=[{2: secs(2)}, {4: secs(4)}])
+    tr.global_batch = 8
+    backend = LiveBackend({0: tr}, steps_per_slot=4)
+    OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert 0 in backend.calibrated
+    assert inst.jobs[0].profile.bandwidth == pytest.approx(b_true, rel=1e-6)
+
+
+def test_live_backend_skips_refit_on_single_comm_load():
+    prof = RarJobProfile(d=100.0, bandwidth=4e6, reduce_speed=float("inf"),
+                         t_fwd_per_sample=0.0, t_bwd=0.0, batch_size=8.0)
+    inst = _one_job_instance(horizon=2, profile=prof)
+    tr = StubTrainer(timings_by_call=[{2: 1e-4}, {2: 1e-4}])
+    backend = LiveBackend({0: tr}, steps_per_slot=4)
+    OnlineDriver(inst, backend=backend).run(ColocTwo())
+    assert backend.calibrated == {}
+    assert inst.jobs[0].profile is prof  # untouched
