@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   eq1   RAR iteration-time model table (paper §III-3)
   re_ring  mid-slot re-ring (elastic reshard) cost vs the paper's
            checkpoint-preemption model (spawns 8 XLA host devices)
+  compress  compressed-ring microbench: f32 ring vs XLA int8 ring vs the
+            fused single-ppermute Pallas ring (spawns 8 XLA host devices;
+            wire-bytes + ppermute-count + us/call rows)
 
 Schedulers are resolved by name through ``repro.sched.registry`` — pass
 ``--schedulers gadget las+elastic`` to compare a subset, ``--list`` to see
@@ -312,6 +315,95 @@ def re_ring_cost(full: bool = False) -> None:
         emit("re_ring/preempt_over_re_ring", 0.0, f"ratio={ratio:.3f}")
 
 
+def compress_ring_bench(full: bool = False) -> None:
+    """Compressed-ring microbench: f32 ring vs XLA int8 ring vs fused ring.
+
+    Times one shard_map'd all-reduce of a d-element gradient on 8 XLA host
+    devices (spawned as a subprocess; jax must not initialize in this
+    parent) for the three wire layouts, and reports per-worker wire bytes +
+    ppermute counts from the shared cost formulas. The fused rows must show
+    half the ppermutes per hop of the XLA int8 ring (the single-message
+    packed layout) — the same invariant tests/test_wire_cost.py pins on the
+    traced jaxpr.
+    """
+    import os
+    import subprocess
+    import textwrap
+
+    d = (1 << 22) if full else (1 << 18)
+    repeats = 20 if full else 8
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import time
+        import jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import ring_all_reduce
+        from repro.dist.compression import compressed_ring_all_reduce
+
+        W, D, REPEATS = 8, {d}, {repeats}
+        mesh = jax.make_mesh((W,), ("d",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (W, D), jnp.float32)
+
+        def bench(fn, name):
+            f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("d", None),
+                                      out_specs=P("d", None),
+                                      check_vma=False))
+            jax.block_until_ready(f(x))          # compile outside timing
+            best = float("inf")
+            for _ in range(REPEATS):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(x))
+                best = min(best, time.perf_counter() - t0)
+            print(f"ROW {{name}} {{best:.6e}}")
+
+        bench(lambda a: ring_all_reduce(a, "d"), "f32_ring")
+        bench(partial(compressed_ring_all_reduce, axis_name="d",
+                      fused=False), "xla_int8_ring")
+        bench(partial(compressed_ring_all_reduce, axis_name="d",
+                      fused=True), "fused_int8_ring")
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"compress benchmark failed:\n{out.stderr[-2000:]}")
+
+    from repro.dist.collectives import ring_wire_elements
+    from repro.dist.compression import (
+        compressed_ring_ppermutes,
+        compressed_wire_bytes,
+    )
+
+    w = 8
+    costs = {
+        "f32_ring": (ring_wire_elements(d, w) * 4.0, 2 * (w - 1)),
+        "xla_int8_ring": (compressed_wire_bytes(d, w),
+                          compressed_ring_ppermutes(w)),
+        "fused_int8_ring": (compressed_wire_bytes(d, w, fused=True),
+                            compressed_ring_ppermutes(w, fused=True)),
+    }
+    timed: Dict[str, float] = {}
+    for line in out.stdout.splitlines():
+        if not line.startswith("ROW "):
+            continue
+        _, name, seconds = line.split()
+        timed[name] = float(seconds)
+        wire, msgs = costs[name]
+        emit(f"compress/{name}", float(seconds) * 1e6,
+             f"wire_bytes_per_worker={wire:.0f};ppermutes={msgs};"
+             f"ppermutes_per_hop={msgs / (2 * (w - 1)):.1f};d={d};w={w}")
+    if "xla_int8_ring" in timed and "fused_int8_ring" in timed:
+        speedup = timed["xla_int8_ring"] / max(timed["fused_int8_ring"], 1e-12)
+        emit("compress/fused_over_xla_int8", 0.0, f"speedup={speedup:.3f}")
+
+
 def eq1_rar_time_model(full: bool = False) -> None:
     """§III-3 table: tau(w) for a 1.2B-param job on v5e constants."""
     prof = profile_from_arch(n_params=1.2e9, tokens_per_batch=4096 * 8)
@@ -331,6 +423,7 @@ FIGS = {
     "fig8": fig8_contention_sweep,
     "eq1": eq1_rar_time_model,
     "re_ring": re_ring_cost,
+    "compress": compress_ring_bench,
 }
 
 # figures that compare schedulers and therefore honor --schedulers

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Union
+from typing import Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -38,6 +38,15 @@ class RarJobProfile:
       t_bwd: backward time ``t^b`` (seconds; batch-independent per paper).
       batch_size: mini-batch size ``M``.
       overhead: per-iteration negotiation/ACK latency ``gamma`` (seconds).
+      compression: ring wire layout — ``None`` (f32 ring), ``"int8"`` (XLA
+        compressed ring: two ppermutes per hop) or ``"int8-fused"`` (the
+        single-ppermute Pallas pipeline). Changes Eq. (1)'s wire term to the
+        compressed byte count, so the scheduler prices what the ring
+        actually sends (``repro.dist.compression`` layouts).
+      message_overhead: optional per-ppermute latency slice of gamma
+        (seconds/message), priced uniformly across layouts via
+        :func:`rar_ring_messages` — one message per hop for the f32 and
+        fused int8 rings, two for the XLA int8 layout.
     """
 
     d: float
@@ -47,6 +56,8 @@ class RarJobProfile:
     t_bwd: float
     batch_size: float
     overhead: float = 0.0
+    compression: Optional[str] = None
+    message_overhead: float = 0.0
 
     def iteration_time(self, w: Array) -> Array:
         return rar_iteration_time(
@@ -58,6 +69,8 @@ class RarJobProfile:
             t_bwd=self.t_bwd,
             batch_size=self.batch_size,
             overhead=self.overhead,
+            compression=self.compression,
+            message_overhead=self.message_overhead,
         )
 
     def iterations_per_slot(self, w: Array, slot_seconds: float) -> Array:
@@ -88,6 +101,93 @@ def rar_allreduce_time(w: Array, d: float, bandwidth: float, reduce_speed: float
     return jnp.where(w <= 1.0, 0.0, t)
 
 
+def rar_compressed_bytes_per_worker(d: float, w: Array, *,
+                                    fused: bool = False, block: int = 4096,
+                                    scale_bytes: int = 4) -> Array:
+    """Per-worker wire bytes of one int8-compressed ring all-reduce.
+
+    XLA layout (``fused=False``): 2(w-1) hops of a ceil(d/w)-byte int8
+    payload plus a separate f32 scale message. Fused single-ppermute layout:
+    2(w-1) hops of one packed message — the payload block-padded to whole
+    ``block`` sub-blocks plus one f32 scale per sub-block in the trailer.
+    Must agree with ``repro.dist.compression.compressed_wire_bytes`` — the
+    scheduler's cost model and the executable layer share the formula
+    (asserted in tests/test_wire_cost.py).
+    """
+    if isinstance(w, (int, float)):
+        if w <= 1:
+            return 0.0
+        c = -(-int(d) // int(w))
+        if fused:
+            b = max(1, min(int(block), c))
+            c_pad = -(-c // b) * b
+            return 2.0 * (w - 1.0) * (c_pad
+                                      + float(scale_bytes) * (c_pad // b))
+        return 2.0 * (w - 1.0) * (float(c) + float(scale_bytes))
+    w = jnp.asarray(w, dtype=jnp.float32)
+    c = jnp.ceil(d / jnp.maximum(w, 1.0))
+    if fused:
+        b = jnp.maximum(1.0, jnp.minimum(float(block), c))
+        c_pad = jnp.ceil(c / b) * b
+        per_hop = c_pad + float(scale_bytes) * (c_pad / b)
+    else:
+        per_hop = c + float(scale_bytes)
+    return jnp.where(w <= 1.0, 0.0, 2.0 * (w - 1.0) * per_hop)
+
+
+def compressed_ring_messages(w: Array, *, fused: bool = False) -> Array:
+    """ppermute messages per compressed all-reduce: the XLA layout pays the
+    per-message latency twice per hop (payload + scale), the fused layout
+    once — 4(w-1) vs 2(w-1). Mirrors
+    ``repro.dist.compression.compressed_ring_ppermutes``."""
+    per_hop = 1 if fused else 2
+    if isinstance(w, (int, float)):
+        return 0 if w <= 1 else 2 * per_hop * (int(w) - 1)
+    w = jnp.asarray(w, dtype=jnp.float32)
+    return jnp.where(w <= 1.0, 0.0, 2.0 * per_hop * (w - 1.0))
+
+
+def rar_ring_messages(w: Array, *, compression: Optional[str] = None) -> Array:
+    """Wire messages per all-reduce for any layout: the f32 ring and the
+    fused int8 ring both send one message per hop (2(w-1)); the XLA int8
+    layout sends two (payload + scale, 4(w-1)). This is what a nonzero
+    per-message ``message_overhead`` multiplies in :func:`rar_iteration_time`
+    — priced uniformly so compressed layouts are not penalized against the
+    f32 ring, and the fused layout's halved gamma is visible against
+    ``"int8"``."""
+    return compressed_ring_messages(w, fused=compression != "int8")
+
+
+def compressed_rar_allreduce_time(
+    w: Array, d: float, bandwidth: float, reduce_speed: float, *,
+    elem_bytes: int = 4, fused: bool = False, block: int = 4096,
+    scale_bytes: int = 4, message_overhead: float = 0.0,
+) -> Array:
+    """Eq. (1)'s collective term re-priced for the int8 ring.
+
+    Wire time = compressed bytes over the link's byte rate
+    (``bandwidth * elem_bytes`` — profiles carry b in f32 elements/sec);
+    reduction still touches d(w-1)/w elements; ``message_overhead`` is the
+    per-ppermute latency slice of gamma, paid once per message — the fused
+    single-ppermute hop halves it relative to the two-message XLA layout.
+    """
+    wire_bytes = rar_compressed_bytes_per_worker(
+        d, w, fused=fused, block=block, scale_bytes=scale_bytes)
+    byte_rate = bandwidth * float(elem_bytes)
+    messages = compressed_ring_messages(w, fused=fused)
+    if isinstance(w, (int, float)):
+        if w <= 1:
+            return 0.0
+        return (wire_bytes / byte_rate
+                + d * (w - 1.0) / w / reduce_speed
+                + messages * message_overhead)
+    w = jnp.asarray(w, dtype=jnp.float32)
+    t = (wire_bytes / byte_rate
+         + d * (w - 1.0) / jnp.maximum(w, 1.0) / reduce_speed
+         + messages * message_overhead)
+    return jnp.where(w <= 1.0, 0.0, t)
+
+
 def rar_iteration_time(
     w: Array,
     *,
@@ -98,14 +198,32 @@ def rar_iteration_time(
     t_bwd: float,
     batch_size: float,
     overhead: float = 0.0,
+    compression: Optional[str] = None,
+    message_overhead: float = 0.0,
 ) -> Array:
     """Eq. (1): per-iteration RAR training time.
 
     ``w`` may be a scalar or an array of candidate worker counts; w <= 1
     degenerates to compute-only time (no ring traffic), matching the paper's
-    single-worker case.
+    single-worker case. ``compression`` switches the collective term to the
+    int8 ring's byte count (``"int8"`` — the two-ppermute XLA layout,
+    ``"int8-fused"`` — the single-ppermute Pallas layout). A nonzero
+    ``message_overhead`` prices the per-ppermute latency slice of gamma
+    uniformly across layouts (:func:`rar_ring_messages`): the f32 and fused
+    rings pay it 2(w-1) times, the XLA int8 layout 4(w-1).
     """
-    comm = rar_allreduce_time(w, d, bandwidth, reduce_speed)
+    if compression is None:
+        comm = rar_allreduce_time(w, d, bandwidth, reduce_speed)
+    elif compression in ("int8", "int8-fused"):
+        comm = compressed_rar_allreduce_time(
+            w, d, bandwidth, reduce_speed,
+            fused=compression == "int8-fused")
+    else:
+        raise ValueError(f"unknown compression {compression!r}; "
+                         "expected None, 'int8' or 'int8-fused'")
+    if message_overhead:
+        comm = comm + rar_ring_messages(
+            w, compression=compression) * message_overhead
     compute = t_fwd_per_sample * batch_size + t_bwd
     return comm + compute + overhead
 
@@ -136,7 +254,8 @@ def effective_iteration_time(profile: "RarJobProfile", effective_bw: float,
     ``effective_bw`` is the fair-share bottleneck bandwidth the ring actually
     sees this slot (elements/sec, same units as ``profile.bandwidth``) — e.g.
     ``ResourceState.effective_bandwidth`` scaled into element units. All other
-    Eq. (1) terms are unchanged.
+    Eq. (1) terms — including the profile's compressed wire layout — are
+    unchanged.
     """
     if effective_bw <= 0.0:
         return float("inf")
@@ -149,6 +268,8 @@ def effective_iteration_time(profile: "RarJobProfile", effective_bw: float,
         t_bwd=profile.t_bwd,
         batch_size=profile.batch_size,
         overhead=profile.overhead,
+        compression=profile.compression,
+        message_overhead=profile.message_overhead,
     )
 
 
@@ -200,6 +321,8 @@ def profile_from_arch(
     link_bandwidth_bytes: float = 50e9,
     grad_elem_bytes: int = 4,
     overhead: float = 5e-3,
+    compression: Optional[str] = None,
+    message_overhead: float = 0.0,
 ) -> RarJobProfile:
     """Derive an Eq.-(1) profile from a real architecture config.
 
@@ -208,6 +331,13 @@ def profile_from_arch(
       - b          = ICI/NIC link bandwidth in elements/sec
       - G          = reduction throughput: HBM-bound 2-read-1-write streams
       - t_f, t_b   = 2ND and 4ND FLOPs over chip peak (fwd:bwd = 1:2)
+
+    ``compression`` (None | "int8" | "int8-fused") selects the wire layout
+    the job's ring actually uses, so Eq. (1) prices the compressed bytes;
+    ``message_overhead`` (seconds/ppermute, a few microseconds for an ICI
+    launch+ACK) is priced uniformly across layouts via
+    :func:`rar_ring_messages`, which is where the fused layout's halved
+    per-hop gamma becomes visible to the scheduler.
     """
     flops_fwd = 2.0 * n_params * tokens_per_batch
     t_f_total = flops_fwd / chip_flops
@@ -223,6 +353,8 @@ def profile_from_arch(
         t_bwd=t_b,
         batch_size=tokens_per_batch,
         overhead=overhead,
+        compression=compression,
+        message_overhead=message_overhead,
     )
 
 

@@ -2,7 +2,9 @@
 
 ``collectives``   — ppermute ring all-reduce (the paper's 2(w-1)-step ring),
                     bidirectional and reduce-scatter variants, wire-cost math.
-``compression``   — int8 quantized / error-feedback compressed rings.
+``compression``   — int8 quantized / error-feedback compressed rings, with
+                    an XLA reference path and the fused single-ppermute
+                    Pallas pipeline (``fused=True``).
 ``overlap``       — gradient accumulation (microbatching) and bucketing.
 ``sharding``      — logical-axis -> mesh-axis rules for the GSPMD/pjit path.
 """
@@ -16,12 +18,16 @@ from repro.dist.collectives import (  # noqa: F401
     ring_wire_elements,
 )
 from repro.dist.compression import (  # noqa: F401
+    DEFAULT_BLOCK,
     compressed_ring_all_reduce,
+    compressed_ring_ppermutes,
     compressed_wire_bytes,
     dequantize,
     ef_compressed_all_reduce,
+    pack_hop_message,
     quantization_error,
     quantize,
+    unpack_hop_message,
 )
 from repro.dist.overlap import bucketed_psum, microbatch_grads  # noqa: F401
 from repro.dist.sharding import (  # noqa: F401

@@ -15,6 +15,14 @@ Total wire traffic per worker: 2 * d * (w-1)/w elements — exactly the
 ``rar_ring_bytes_per_worker`` term (with ``elem_bytes=1``) the GADGET
 scheduler prices in :mod:`repro.core.rar_model`. ``ring_wire_elements`` below
 is asserted against it in the tests.
+
+The int8-compressed variants live in :mod:`repro.dist.compression`. Their
+fused hop layout rides the same ``_ring_perm`` schedule but each hop's wire
+message is ONE int8 buffer — blockwise-quantized payload followed by a
+trailer of per-block f32 scales bitcast to int8 — so a hop pays exactly one
+``ppermute`` (the XLA reference layout pays two: payload + scale). Blockwise
+scales bound the per-element rounding error by ``max|x_block| / 254``
+instead of the flat quantizer's ``max|x| / 254``.
 """
 
 from __future__ import annotations

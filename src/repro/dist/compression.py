@@ -1,8 +1,8 @@
 """Gradient compression for the ring: int8 quantization + error feedback.
 
 The ring's wire term d(w-1)/w * 2/b is bandwidth-bound for large models, so
-shrinking elements 4x (f32 -> int8 + one f32 scale per hop) shifts the
-paper's Eq. (1) toward compute. Two variants:
+shrinking elements 4x (f32 -> int8 + f32 scales) shifts the paper's Eq. (1)
+toward compute. Two collectives:
 
   * ``compressed_ring_all_reduce`` — every hop's payload is quantized
     (per-hop rounding error, no state). Share-Reduce re-quantizes partial
@@ -10,7 +10,46 @@ paper's Eq. (1) toward compute. Two variants:
     verbatim, so gather adds no extra error beyond one quantization.
   * ``ef_compressed_all_reduce`` — error feedback (Karimireddy et al.):
     each worker adds its residual before compressing and carries the new
-    residual, recovering exact-SGD convergence rates.
+    residual, recovering exact-SGD convergence rates. The tensor is
+    quantized exactly once on the send side: the ring's first Share-Reduce
+    hop forwards that int8 payload verbatim instead of re-quantizing the
+    dequantized values (re-quantization would both waste a pass and add
+    rounding the residual does not track).
+
+Both take a ``fused=`` switch selecting between two executions:
+
+**XLA reference path** (``fused=False``): flat global-amax ``quantize`` per
+message, and each hop pays the per-message latency gamma *twice* — one
+``ppermute`` for the int8 payload, a second for the f32 scale —
+``2 * (2(w-1))`` collectives per all-reduce.
+
+**Fused Pallas path** (``fused=True``): the single-ppermute hop layout.
+Each hop's wire message is ONE int8 buffer::
+
+    [ int8 payload: n_blocks * block ][ trailer: n_blocks f32 scales,
+                                        bitcast to 4 int8 bytes each ]
+
+``repro.kernels.quant_ring.quantize_pack_pallas`` emits payload + per-block
+scales in one VMEM pass (blockwise scales tighten the error bound from
+``max|chunk|/254`` to ``max|block|/254``), and the receive side is the fused
+``dequant_accumulate_pallas`` — ``recv_int8 * scale + chunk`` without
+materializing the dequantized f32 intermediate in HBM. One ``ppermute`` per
+hop: gamma is paid once, ``2(w-1)`` collectives per all-reduce — exactly
+half the reference path (pinned by the trace-count test in
+tests/test_wire_cost.py).
+
+The fused Share-Reduce is also a *double-buffered hop schedule*: the only
+work on the critical path between receiving hop s and sending hop s+1 is
+the one-pass ``dequant_add_quantize_pallas`` hop kernel on the received
+sub-blocks — the f32 partial sums never round-trip through the (w, chunk)
+HBM accumulator that the XLA path scatter-updates every hop (each chunk
+index is touched exactly once per worker, so the original local chunk is
+read directly at its hop), and the kernel's sub-block grid double-buffers
+tile k+1's VMEM copy against tile k's compute. In the Share-Only phase the
+forwarded buffer *is* the received buffer, so nothing but the ppermute
+chain sits on the wire path: the gathered chunks' dequantization runs as
+one batched kernel with no send-side consumer, overlapping the remaining
+hops' transfers on an async backend.
 """
 
 from __future__ import annotations
@@ -22,8 +61,21 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.dist.collectives import _all_gather_chunks, _as_chunks, _ring_perm
+from repro.kernels.quant_ring import (
+    dequant_accumulate_pallas,
+    dequant_add_quantize_pallas,
+    quantize_pack_pallas,
+)
 
 QMAX = 127.0  # symmetric int8 range
+
+# default sub-block size of the fused path: the per-block f32 scale costs
+# 4/block of the payload on the wire (0.1% at 4096 — negligible next to the
+# halved message count), while a 4096-element block's amax scale is still
+# vastly tighter than the XLA path's whole-chunk amax; full lanes on TPU
+DEFAULT_BLOCK = 4096
+
+SCALE_BYTES = 4  # one f32 scale per message (XLA path) or per block (fused)
 
 
 def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -50,19 +102,92 @@ def quantization_error(x: jax.Array) -> jax.Array:
     return x.astype(jnp.float32) - dequantize(quantize(x), x.size, x.shape)
 
 
-def compressed_ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
-    """Ring all-reduce with int8-quantized hop payloads (stateless)."""
+def _interpret_default(interpret: Optional[bool]) -> bool:
+    """Pallas kernels compile natively on TPU, interpret elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused single-ppermute wire format: payload ++ bitcast scale trailer
+# ---------------------------------------------------------------------------
+
+def pack_hop_message(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Pack ``(n_blocks, block)`` int8 + ``(n_blocks,)`` f32 into one int8
+    wire buffer: payload first, then each scale bitcast to 4 int8 bytes."""
+    trailer = lax.bitcast_convert_type(scales, jnp.int8).reshape(-1)
+    return jnp.concatenate([q.reshape(-1), trailer])
+
+
+def unpack_hop_message(msg: jax.Array, n_blocks: int,
+                       block: int) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`pack_hop_message`."""
+    n = n_blocks * block
+    q = msg[:n].reshape(n_blocks, block)
+    scales = lax.bitcast_convert_type(
+        msg[n:].reshape(n_blocks, SCALE_BYTES), jnp.float32)
+    return q, scales
+
+
+def _fused_chunk_layout(n: int, w: int, block: int) -> Tuple[int, int, int]:
+    """(chunk elements, sub-blocks per chunk, total pad) for a flat size n.
+
+    Chunks are padded so each splits into whole ``block``-sized sub-blocks;
+    the effective block never exceeds the chunk itself.
+    """
+    c = -(-n // max(w, 1))                 # ceil(n / w)
+    b = max(1, min(int(block), c))
+    c_pad = -(-c // b) * b
+    return c_pad, c_pad // b, w * c_pad - n
+
+
+# ---------------------------------------------------------------------------
+# the compressed ring collective
+# ---------------------------------------------------------------------------
+
+def compressed_ring_all_reduce(
+    x: jax.Array, axis_name: str, *, fused: bool = False,
+    block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Ring all-reduce with int8-quantized hop payloads (stateless).
+
+    ``fused=False`` is the XLA reference path (global-amax scale, payload
+    and scale each ppermuted); ``fused=True`` runs the Pallas blockwise
+    single-ppermute pipeline (module docstring). ``block`` is the fused
+    path's sub-block size; ``interpret`` overrides the TPU-native/interpret
+    autodetection of the Pallas kernels.
+    """
     w = lax.axis_size(axis_name)
     if w == 1:
         return x
+    if fused:
+        return _fused_ring_all_reduce(x, axis_name, block=block,
+                                      interpret=_interpret_default(interpret))
+    return _xla_ring_all_reduce(x, axis_name)
+
+
+def _xla_ring_all_reduce(x: jax.Array, axis_name: str,
+                         first_hop: Optional[Tuple[jax.Array, jax.Array]] = None,
+                         ) -> jax.Array:
+    """Reference path: two ppermutes per hop (int8 payload + f32 scale).
+
+    ``first_hop = (q_chunks, scale)`` lets error feedback forward its
+    already-quantized payload on the first Share-Reduce hop (``q_chunks`` is
+    the (w, chunk) int8 mirror of the input's chunk layout, ``scale`` its
+    global f32 scale) instead of re-quantizing the dequantized tensor.
+    """
+    w = lax.axis_size(axis_name)
     chunks, pad = _as_chunks(x.astype(jnp.float32), w)
     idx = lax.axis_index(axis_name)
     perm = _ring_perm(w)
 
     # Share-Reduce: quantize each hop's partial sum before sending.
     for s in range(w - 1):
-        send = jnp.take(chunks, (idx - s) % w, axis=0)
-        q, scale = quantize(send)
+        if s == 0 and first_hop is not None:
+            q, scale = jnp.take(first_hop[0], idx, axis=0), first_hop[1]
+        else:
+            q, scale = quantize(jnp.take(chunks, (idx - s) % w, axis=0))
         q = lax.ppermute(q, axis_name, perm)
         scale = lax.ppermute(scale, axis_name, perm)
         chunks = chunks.at[(idx - s - 1) % w].add(q.astype(jnp.float32) * scale)
@@ -82,31 +207,190 @@ def compressed_ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     return flat.reshape(x.shape).astype(x.dtype)
 
 
+def _fused_ring_all_reduce(
+    x: jax.Array, axis_name: str, *, block: int, interpret: bool,
+    first_hop: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Fused path: one packed ppermute per hop, Pallas quantize/accumulate.
+
+    ``first_hop`` is an optional pre-packed wire message for the first
+    Share-Reduce send (error feedback's already-quantized chunk).
+    """
+    w = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(w)
+    flat = x.reshape(-1).astype(jnp.float32)
+    c_pad, nb, pad = _fused_chunk_layout(flat.size, w, block)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(w, nb, c_pad // nb)
+
+    b = c_pad // nb
+
+    def quant_pack(blocks2d: jax.Array) -> jax.Array:
+        q, scales = quantize_pack_pallas(blocks2d, interpret=interpret)
+        return pack_hop_message(q, scales)
+
+    # Share-Reduce: each hop receives ONE packed message, and the whole
+    # send-critical path is the one-pass dequant-add-requantize kernel on
+    # the received sub-blocks (no HBM scatter into `chunks` — chunk
+    # (idx-s-1) is read exactly once, at its own hop; the f32 partial sum
+    # never leaves VMEM). The last hop's fused accumulate produces the
+    # owned reduced chunk.
+    if first_hop is not None:
+        send = first_hop
+    else:
+        send = quant_pack(jnp.take(chunks, idx, axis=0))
+    reduced_own = None
+    for s in range(w - 1):
+        recv = lax.ppermute(send, axis_name, perm)  # the hop's ONE collective
+        local = jnp.take(chunks, (idx - s - 1) % w, axis=0)
+        q, scales = unpack_hop_message(recv, nb, b)
+        if s < w - 2:
+            q2, s2 = dequant_add_quantize_pallas(q, scales, local,
+                                                 interpret=interpret)
+            send = pack_hop_message(q2, s2)
+        else:
+            reduced_own = dequant_accumulate_pallas(q, scales, local,
+                                                    interpret=interpret)
+
+    # Share-Only: quantize the owned chunk once; every hop forwards the
+    # received buffer verbatim, so nothing but the ppermute chain is on the
+    # wire path — the dequantization of all w gathered chunks happens in
+    # one batched kernel call that overlaps the tail of the ring on an
+    # async backend (and each chunk still pays exactly one gather-phase
+    # quantization; the owner reads back its own quantized payload so every
+    # worker ends with bit-identical values).
+    own = (idx + 1) % w
+    send = quant_pack(reduced_own)
+    msgs = [send]
+    chunk_ids = [own]
+    for s in range(w - 1):
+        recv = lax.ppermute(send, axis_name, perm)
+        msgs.append(recv)
+        chunk_ids.append((idx - s) % w)
+        send = recv
+    stacked = jnp.stack(msgs)                       # (w, message)
+    q_all = stacked[:, : nb * b].reshape(w * nb, b)
+    scales_all = lax.bitcast_convert_type(
+        stacked[:, nb * b:].reshape(w * nb, SCALE_BYTES), jnp.float32)
+    deq = dequant_accumulate_pallas(q_all, scales_all, None,
+                                    interpret=interpret)
+    out = jnp.zeros((w, nb, b), jnp.float32)
+    out = out.at[jnp.stack(chunk_ids)].set(deq.reshape(w, nb, b))
+
+    flat = out.reshape(-1)
+    if pad:
+        flat = flat[: flat.size - pad]
+    return flat.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
 def ef_compressed_all_reduce(
-    g: jax.Array, residual: Optional[jax.Array], axis_name: str,
+    g: jax.Array, residual: Optional[jax.Array], axis_name: str, *,
+    fused: bool = False, block: int = DEFAULT_BLOCK,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Error-feedback compressed all-reduce.
 
-    corrected = g + residual; each worker ring-reduces Q(corrected) over the
-    int8 ring and keeps residual' = corrected - Q(corrected) for the next
-    step. Returns (sum-reduced compressed gradient, new residual). The
-    residual covers this worker's own compression; the int8 ring's per-hop
-    re-quantization of partial sums adds noise no residual tracks (small:
-    bounded by hops * max|partial|/254).
+    corrected = g + residual; the worker quantizes corrected exactly once,
+    keeps residual' = corrected - Q(corrected) for the next step, and the
+    ring's first Share-Reduce hop forwards that int8 payload verbatim (no
+    re-quantization of the dequantized values — the skipped pass used to add
+    rounding the residual cannot see). Returns (sum-reduced compressed
+    gradient, new residual). The residual covers this worker's own
+    compression; the ring's per-hop re-quantization of partial sums adds
+    noise no residual tracks (small: bounded by hops * max|partial|/254;
+    ``fused=True`` tightens it to per-``block`` amax).
     """
     corrected = g.astype(jnp.float32)
     if residual is not None:
         corrected = corrected + residual.astype(jnp.float32)
-    compressed = dequantize(quantize(corrected), corrected.size,
-                            corrected.shape)
+    w = lax.axis_size(axis_name)
+    if w == 1:
+        # no hops — still quantize once so the residual semantics (and the
+        # fused mode's blockwise rounding) match the w >= 2 ring exactly
+        if fused:
+            interp = _interpret_default(interpret)
+            c_pad, nb, pad = _fused_chunk_layout(corrected.size, 1, block)
+            flat = corrected.reshape(-1)
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            q, scales = quantize_pack_pallas(
+                flat.reshape(nb, c_pad // nb), interpret=interp)
+            deq = dequant_accumulate_pallas(q, scales, None, interpret=interp)
+            compressed = deq.reshape(-1)[: corrected.size].reshape(
+                corrected.shape)
+        else:
+            compressed = dequantize(quantize(corrected), corrected.size,
+                                    corrected.shape)
+        return compressed.astype(g.dtype), corrected - compressed
+
+    if fused:
+        interp = _interpret_default(interpret)
+        c_pad, nb, pad = _fused_chunk_layout(corrected.size, w, block)
+        flat = corrected.reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        blocks2d = flat.reshape(w * nb, c_pad // nb)
+        q, scales = quantize_pack_pallas(blocks2d, interpret=interp)
+        deq = dequant_accumulate_pallas(q, scales, None, interpret=interp)
+        deq_flat = deq.reshape(-1)[: corrected.size]
+        compressed = deq_flat.reshape(corrected.shape)
+        idx = lax.axis_index(axis_name)
+        first = pack_hop_message(
+            lax.dynamic_slice_in_dim(q, idx * nb, nb, axis=0),
+            lax.dynamic_slice_in_dim(scales, idx * nb, nb, axis=0))
+        reduced = _fused_ring_all_reduce(compressed, axis_name, block=block,
+                                         interpret=interp, first_hop=first)
+    else:
+        q_flat, scale = quantize(corrected)
+        compressed = dequantize((q_flat, scale), corrected.size,
+                                corrected.shape)
+        q_chunks, _ = _as_chunks(q_flat, w)
+        reduced = _xla_ring_all_reduce(compressed, axis_name,
+                                       first_hop=(q_chunks, scale))
     new_residual = corrected - compressed
-    reduced = compressed_ring_all_reduce(compressed, axis_name)
     return reduced.astype(g.dtype), new_residual
 
 
-def compressed_wire_bytes(d: float, w: int, *, scale_bytes: int = 4) -> float:
-    """Per-worker wire bytes of the int8 ring: 2(w-1) hops of (d/w int8
-    payload + one f32 scale). ~3.9x below the f32 ring's 2d(w-1)/w * 4."""
+# ---------------------------------------------------------------------------
+# wire-cost accounting (the executable side of the scheduler's Eq. (1))
+# ---------------------------------------------------------------------------
+
+def compressed_ring_ppermutes(w: int, *, fused: bool = False) -> int:
+    """ppermute collectives one compressed all-reduce issues per worker.
+
+    The XLA path pays gamma twice per hop (payload + f32 scale are separate
+    collectives): 4(w-1). The fused path packs the scales into the payload
+    trailer: one collective per hop, 2(w-1) — exactly half. Asserted against
+    the traced collective in tests/test_wire_cost.py.
+    """
+    if w <= 1:
+        return 0
+    return (2 if fused else 4) * (w - 1)
+
+
+def compressed_wire_bytes(d: float, w: int, *, scale_bytes: int = SCALE_BYTES,
+                          fused: bool = False,
+                          block: int = DEFAULT_BLOCK) -> float:
+    """Per-worker wire bytes of one int8 ring all-reduce.
+
+    XLA path: 2(w-1) hops, each sending a ceil(d/w)-byte int8 payload plus a
+    separate ``scale_bytes`` f32 scale message (the chunk is zero-padded to
+    split evenly, and the pad bytes do cross the wire). Fused path: 2(w-1)
+    hops of ONE packed message — the block-padded payload plus one f32 scale
+    per ``block`` sub-block bitcast into the trailer. Both are ~3.9x below
+    the f32 ring's 2d(w-1)/w * 4 for d >> w * block; asserted against the
+    traced collective payloads in tests/test_wire_cost.py.
+    """
     if w <= 1:
         return 0.0
-    return 2.0 * (w - 1.0) * (float(d) / float(w) + float(scale_bytes))
+    if fused:
+        c_pad, nb, _ = _fused_chunk_layout(int(d), w, block)
+        return 2.0 * (w - 1.0) * (c_pad + float(scale_bytes) * nb)
+    c = -(-int(d) // w)  # ceil(d / w): the executed (padded) chunk size
+    return 2.0 * (w - 1.0) * (float(c) + float(scale_bytes))

@@ -1,13 +1,19 @@
 """Pallas TPU kernels for the compute hot spots of the scheduled jobs.
 
-The paper (a scheduler) has no kernel-level contribution of its own; these
-kernels belong to the *jobs* GADGET schedules — attention/SSD/WKV are where
-their FLOPs live (DESIGN.md §3, §7). Each kernel ships with a pure-jnp
-oracle in ``ref.py`` and is validated in interpret mode on CPU across
-shape/dtype sweeps (tests/test_kernels.py).
+The paper (a scheduler) has no kernel-level contribution of its own;
+attention/SSD/WKV belong to the *jobs* GADGET schedules — that is where
+their FLOPs live (DESIGN.md §3, §7). ``quant_ring`` is the exception: it
+fuses the compressed ring's quantize->send / recv->accumulate hop
+(``repro.dist.compression``), the wire term GADGET's Eq. (1) prices. Each
+kernel ships with a pure-jnp oracle in ``ref.py`` and is validated in
+interpret mode on CPU across shape/dtype sweeps (tests/test_kernels.py).
 """
 
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
+from repro.kernels.quant_ring import (  # noqa: F401
+    dequant_accumulate_pallas,
+    quantize_pack_pallas,
+)
 from repro.kernels.rwkv6_wkv import wkv6_pallas  # noqa: F401
 from repro.kernels.ssd_scan import ssd_scan_pallas  # noqa: F401
 from repro.kernels import ops, ref  # noqa: F401

@@ -15,6 +15,10 @@ from typing import Optional
 import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant_ring import (
+    dequant_accumulate_pallas,
+    quantize_pack_pallas,
+)
 from repro.kernels.rwkv6_wkv import wkv6_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -42,3 +46,17 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def wkv6(r, k, v, logw, u, *, chunk: int = 32):
     return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=not _on_tpu())
+
+
+@jax.jit
+def quantize_blockwise(x):
+    """Blockwise int8 quantization of a ``(n_blocks, block)`` array:
+    returns ``(q int8, scales f32[n_blocks])`` with per-block amax scales."""
+    return quantize_pack_pallas(x, interpret=not _on_tpu())
+
+
+@jax.jit
+def dequant_accumulate(q, scales, acc=None):
+    """Fused ``acc + q * scale`` per block (f32 out); ``acc=None`` is a
+    plain blockwise dequantize."""
+    return dequant_accumulate_pallas(q, scales, acc, interpret=not _on_tpu())

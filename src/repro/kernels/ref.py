@@ -68,6 +68,28 @@ def ssd_reference(
     return ys.transpose(1, 0, 2, 3), state  # (B,S,H,P)
 
 
+def quantize_block_reference(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization oracle for ``(nb, block)`` x.
+
+    Mirrors :func:`repro.kernels.quant_ring.quantize_pack_pallas`: per-row
+    amax scale (1.0 for all-zero rows), int8 payload.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scales[:, None]), -127.0, 127.0)
+    return q.astype(jnp.int8), scales
+
+
+def dequant_accumulate_reference(q: jax.Array, scales: jax.Array,
+                                 acc: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle for the fused dequant(+accumulate): acc + q * scale per row."""
+    out = q.astype(jnp.float32) * scales[:, None]
+    if acc is not None:
+        out = out + acc.astype(jnp.float32)
+    return out
+
+
 def wkv6_reference(
     r: jax.Array,     # (B,S,H,P)
     k: jax.Array,

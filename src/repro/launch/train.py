@@ -40,7 +40,8 @@ def main() -> None:
     p.add_argument("--seq", type=int, default=64)
     p.add_argument("--lr", type=float, default=1e-3)
     p.add_argument("--mode", default="ring",
-                   choices=["ring", "bidir", "psum", "compressed"])
+                   choices=["ring", "bidir", "psum", "compressed",
+                            "compressed-fused"])
     p.add_argument("--optimizer", default=None)
     p.add_argument("--checkpoint-dir", default=None)
     p.add_argument("--log-every", type=int, default=10)

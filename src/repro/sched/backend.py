@@ -253,6 +253,28 @@ class LiveBackend:
         per_worker = getattr(trainer, "global_batch", 0) / world
         return profile.t_fwd_per_sample * per_worker + profile.t_bwd
 
+    def _effective_elements(self, d: int, w: int, compression) -> float:
+        """Gradient size in f32-ring-equivalent elements for the comm fit.
+
+        ``fit_comm_model`` fits the f32 ring's slope (wire bytes linear in
+        d(w-1)/w). A compressed-ring job puts ~4x fewer bytes on the wire
+        for the same d, so its measured timings must be fit at the byte
+        count it actually sends — otherwise the refit inflates bandwidth
+        ~4x and Eq. (1) then divides the already-compressed byte count by
+        it, double-counting the saving.
+        """
+        if not compression:
+            return float(d)
+        from repro.core.rar_model import (
+            rar_compressed_bytes_per_worker,
+            rar_ring_bytes_per_worker,
+        )
+
+        return float(d) * (
+            rar_compressed_bytes_per_worker(
+                d, w, fused=compression == "int8-fused")
+            / rar_ring_bytes_per_worker(d, w, elem_bytes=4))
+
     def _record_timings(self, job_id: int, trainer,
                         timings: Mapping[int, float], execution) -> None:
         if not self.calibrate or not timings:
@@ -261,10 +283,13 @@ class LiveBackend:
         if job.profile is None:
             return  # nothing to refit
         d = self._param_count(job_id, trainer)
+        compression = getattr(job.profile, "compression", None)
         bucket = self.samples.setdefault(job_id, [])
         for w, seconds in timings.items():
             if w >= 2 and seconds > 0:
-                bucket.append(RingTimingSample(world=int(w), n_elements=d,
+                n_eff = self._effective_elements(d, int(w), compression)
+                bucket.append(RingTimingSample(world=int(w),
+                                               n_elements=n_eff,
                                                seconds=float(seconds)))
         if len({round(s.comm_load) for s in bucket if s.world >= 2}) < 2:
             return  # fit needs >= 2 distinct comm loads

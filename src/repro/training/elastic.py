@@ -95,7 +95,10 @@ class RingWorkerGroup:
     The cache is keyed by ``(workers, mode)``; ``compile_count`` counts cache
     misses (each miss builds a fresh ``jax.jit(jax.shard_map(...))`` — the
     expensive trace/compile path), so equal-sized back-to-back slots can be
-    asserted to reuse the executable.
+    asserted to reuse the executable. ``mode`` is any
+    :func:`~repro.training.train_step.make_ring_train_step` ring mode,
+    including ``"compressed"`` (int8 ring) and ``"compressed-fused"`` (the
+    Pallas single-ppermute hop pipeline of :mod:`repro.dist.compression`).
     """
 
     def __init__(self, model, optimizer: Optimizer, *, global_batch: int,

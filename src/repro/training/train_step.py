@@ -6,9 +6,9 @@ Two distribution flavours:
     path): sharding constraints steer GSPMD; gradients reduce via compiler-
     inserted collectives.
   * :func:`make_ring_train_step` — shard_map explicit-DP path: per-worker
-    grads reduced by the paper's ppermute ring all-reduce (or the compressed
-    / bidirectional variants) — the faithful RAR training loop used by the
-    elastic examples.
+    grads reduced by the paper's ppermute ring all-reduce (or the
+    bidirectional / compressed / fused-Pallas-compressed variants) — the
+    faithful RAR training loop used by the elastic examples.
 """
 
 from __future__ import annotations
@@ -53,18 +53,24 @@ def make_ring_train_step(model, optimizer: Optimizer, axis_name: str, *,
     """Explicit-DP step for shard_map: local grads -> RAR ring -> update.
 
     mode: "ring" (paper-faithful), "bidir" (counter-rotating rings),
-    "psum" (XLA-native), "compressed" (int8 ring; pair with error_feedback).
+    "psum" (XLA-native), "compressed" (int8 ring, XLA reference: two
+    ppermutes per hop), "compressed-fused" (the Pallas single-ppermute hop
+    pipeline — blockwise scales packed into the payload trailer, fused
+    dequant-accumulate on receive; see repro.dist.compression). Both
+    compressed modes pair with error_feedback.
     Signature: (params, opt_state, local_batch[, ef_state])
              -> (params, opt_state, metrics[, ef_state]).
     Batch-mean semantics: local grads averaged by world size after reduce.
     """
+    fused = mode == "compressed-fused"
 
     def reduce_tree(grads, ef_state):
         w = jax.lax.axis_size(axis_name)
-        if mode == "compressed":
+        if mode in ("compressed", "compressed-fused"):
             if error_feedback and ef_state is not None:
                 pairs = jax.tree.map(
-                    lambda g, r: ef_compressed_all_reduce(g, r, axis_name),
+                    lambda g, r: ef_compressed_all_reduce(
+                        g, r, axis_name, fused=fused),
                     grads, ef_state)
                 reduced = jax.tree.map(lambda t: t[0] / w, pairs,
                                        is_leaf=lambda x: isinstance(x, tuple))
@@ -74,7 +80,8 @@ def make_ring_train_step(model, optimizer: Optimizer, axis_name: str, *,
             from repro.dist.compression import compressed_ring_all_reduce
 
             return jax.tree.map(
-                lambda g: compressed_ring_all_reduce(g, axis_name) / w,
+                lambda g: compressed_ring_all_reduce(
+                    g, axis_name, fused=fused) / w,
                 grads), ef_state
         fn = RING_MODES[mode]
         return jax.tree.map(lambda g: fn(g, axis_name) / w, grads), ef_state

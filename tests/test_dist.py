@@ -197,3 +197,201 @@ def test_measured_ring_timings_calibrate_bandwidth():
         print(f"CALIB_OK b={fit.bandwidth:.3e}")
     """)
     assert "CALIB_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# compressed ring: fused single-ppermute path + EF first-hop fix
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_hop_message_roundtrip():
+    from repro.dist.compression import pack_hop_message, unpack_hop_message
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.randint(key, (5, 64), -127, 128, jnp.int8)
+    scales = jnp.abs(jax.random.normal(key, (5,), jnp.float32)) + 1e-3
+    msg = pack_hop_message(q, scales)
+    assert msg.dtype == jnp.int8 and msg.size == 5 * 64 + 5 * 4
+    q2, s2 = unpack_hop_message(msg, 5, 64)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(s2))
+
+
+def test_fused_chunk_layout_edges():
+    """Chunk/sub-block layout for sizes not divisible by w or w*block."""
+    from repro.dist.compression import _fused_chunk_layout
+
+    # divisible: no padding
+    assert _fused_chunk_layout(8 * 512, 8, 512) == (512, 1, 0)
+    # chunk smaller than block: block clamps to the chunk
+    c_pad, nb, pad = _fused_chunk_layout(40, 8, 512)
+    assert (c_pad, nb) == (5, 1) and pad == 0
+    # ragged: chunks pad up to whole sub-blocks
+    c_pad, nb, pad = _fused_chunk_layout(1000, 8, 64)
+    assert c_pad == 128 and nb == 2 and pad == 8 * 128 - 1000
+    # n < w: degenerate one-element blocks
+    c_pad, nb, pad = _fused_chunk_layout(3, 8, 512)
+    assert (c_pad, nb, pad) == (1, 1, 5)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_compressed_ring_w1_passthrough(fused):
+    """A 1-worker ring is a no-op: the input comes back bit-identical (and
+    no quantization is applied at all)."""
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+    from repro.dist.compression import compressed_ring_all_reduce
+
+    mesh = jax.make_mesh((1,), ("d",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 257), jnp.float32)
+    f = shard_map(lambda a: compressed_ring_all_reduce(a, "d", fused=fused),
+                  mesh=mesh, in_specs=P("d", None), out_specs=P("d", None))
+    np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_ef_w1_quantizes_once(fused):
+    """On one worker EF reduces to Q(g + residual): the result is the
+    dequantized payload and the residual is exactly the rounding error —
+    with the *same* quantizer as the w >= 2 ring (blockwise when fused, so
+    an elastic shrink to w=1 does not change the rounding semantics)."""
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+    from repro.dist.compression import ef_compressed_all_reduce
+    from repro.kernels.ref import (
+        dequant_accumulate_reference,
+        quantize_block_reference,
+    )
+
+    mesh = jax.make_mesh((1,), ("d",))
+    g = jax.random.normal(jax.random.PRNGKey(1), (1, 300), jnp.float32)
+    res = jax.random.normal(jax.random.PRNGKey(2), (1, 300), jnp.float32) * .1
+
+    def f(gg, rr):
+        return ef_compressed_all_reduce(gg, rr, "d", fused=fused, block=50)
+
+    out, new_res = shard_map(f, mesh=mesh, in_specs=(P("d", None),) * 2,
+                             out_specs=(P("d", None),) * 2)(g, res)
+    corrected = np.asarray(g + res)
+    if fused:
+        back = dequant_accumulate_reference(
+            *quantize_block_reference(jnp.asarray(corrected.reshape(6, 50))))
+        back = np.asarray(back).reshape(corrected.shape)
+    else:
+        back = np.asarray(dequantize(quantize(jnp.asarray(corrected)),
+                                     corrected.size, corrected.shape))
+    np.testing.assert_allclose(np.asarray(out), back, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_res),
+                               corrected - np.asarray(out), atol=1e-6)
+
+
+@pytest.mark.slow
+def test_fused_ring_close_to_exact_nondivisible():
+    """Fused single-ppermute ring on a size divisible by neither w nor
+    w*block: correct sum, every worker bit-identical."""
+    out = run_multidevice("""
+        from functools import partial
+        x = jax.random.normal(jax.random.PRNGKey(2), (8, 513), jnp.float32)
+        f = shard_map(partial(compressed_ring_all_reduce, axis_name="d",
+                              fused=True, block=128),
+                      mesh=mesh, in_specs=P("d", None), out_specs=P("d", None))
+        got = np.asarray(jax.jit(f)(x))
+        want = np.asarray(x.sum(axis=0))
+        rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+        assert rel < 0.15, rel  # int8 per-hop rounding, no EF
+        assert (got == got[0]).all()  # single gather-phase quantization
+        print("FUSED_RING_OK", rel)
+    """)
+    assert "FUSED_RING_OK" in out
+
+
+@pytest.mark.slow
+def test_ef_fused_close_to_exact():
+    out = run_multidevice("""
+        from functools import partial
+        x = jax.random.normal(jax.random.PRNGKey(3), (8, 700), jnp.float32)
+
+        def f(a):
+            r, res = ef_compressed_all_reduce(a, jnp.zeros_like(a), "d",
+                                              fused=True, block=256)
+            return r
+        got = np.asarray(jax.jit(shard_map(
+            f, mesh=mesh, in_specs=P("d", None),
+            out_specs=P("d", None)))(x))
+        want = np.asarray(x.sum(axis=0))
+        rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+        assert rel < 0.15, rel
+        print("EF_FUSED_OK", rel)
+    """)
+    assert "EF_FUSED_OK" in out
+
+
+@pytest.mark.slow
+def test_ef_first_hop_bitexact_no_double_quantization():
+    """The EF pin: the ring's first Share-Reduce hop forwards EF's already-
+    quantized payload verbatim. Inputs are integer multiples of a power-of-
+    two scale (amax = 127 * 2^-3), so every op on the fixed path is exact in
+    f32 and the executed collective must match a numpy reference of the
+    skip-requantization semantics BIT FOR BIT — while the old behaviour
+    (re-quantizing the dequantized tensor per chunk on hop 0) provably
+    diverges on the same inputs."""
+    out = run_multidevice("""
+        S0 = np.float32(0.125)                   # power-of-two global scale
+        rng = np.random.default_rng(0)
+        n, c = 64, 32                            # w=2 ring, chunk=32
+        k = rng.integers(-100, 101, size=(2, n)).astype(np.float32)
+        k[:, 0] = 127.0                          # pin global amax in chunk 0
+        g = (k * S0).astype(np.float32)          # exactly representable
+
+        def ref_new(g0, g1):
+            # skip-requantization semantics, all-f32, same op order
+            q = [np.round(gg / S0).astype(np.float32) for gg in (g0, g1)]
+            red = {}
+            for i in (0, 1):
+                peer = 1 - i
+                red[i] = (gg := g0 if i == 0 else g1).reshape(2, c)[peer] \\
+                    + q[peer].reshape(2, c)[peer] * S0
+            final = np.zeros((2, c), np.float32)
+            for i in (0, 1):
+                amax = np.float32(np.abs(red[i]).max())
+                scale = amax / np.float32(127.0) if amax > 0 else np.float32(1)
+                qq = np.clip(np.round(red[i] / scale), -127, 127)
+                final[1 - i] = qq.astype(np.float32) * scale
+            return final.reshape(-1)
+
+        def ref_old(g0, g1):
+            # the removed behaviour: hop-0 re-quantizes dequantized chunks
+            q = [np.round(gg / S0).astype(np.float32) for gg in (g0, g1)]
+            red = {}
+            for i in (0, 1):
+                peer = 1 - i
+                v = q[peer].reshape(2, c)[peer] * S0
+                amax = np.float32(np.abs(v).max())
+                scale = amax / np.float32(127.0) if amax > 0 else np.float32(1)
+                payload = np.clip(np.round(v / scale), -127, 127)
+                red[i] = (g0 if i == 0 else g1).reshape(2, c)[peer] \\
+                    + payload.astype(np.float32) * scale
+            final = np.zeros((2, c), np.float32)
+            for i in (0, 1):
+                amax = np.float32(np.abs(red[i]).max())
+                scale = amax / np.float32(127.0) if amax > 0 else np.float32(1)
+                qq = np.clip(np.round(red[i] / scale), -127, 127)
+                final[1 - i] = qq.astype(np.float32) * scale
+            return final.reshape(-1)
+
+        want = ref_new(g[0], g[1])
+        assert np.abs(want - ref_old(g[0], g[1])).max() > 0, \\
+            "inputs must distinguish the fixed path from the old one"
+
+        mesh2 = jax.make_mesh((2,), ("e",))
+
+        def f(a):
+            r, res = ef_compressed_all_reduce(a, jnp.zeros_like(a), "e")
+            return r
+        got = np.asarray(jax.jit(shard_map(
+            f, mesh=mesh2, in_specs=P("e", None),
+            out_specs=P("e", None)))(jnp.asarray(g)))
+        np.testing.assert_array_equal(got[0], want)
+        np.testing.assert_array_equal(got[1], want)
+        print("EF_BITEXACT_OK")
+    """)
+    assert "EF_BITEXACT_OK" in out

@@ -416,3 +416,36 @@ def test_live_backend_skips_refit_on_single_comm_load():
     OnlineDriver(inst, backend=backend).run(ColocTwo())
     assert backend.calibrated == {}
     assert inst.jobs[0].profile is prof  # untouched
+
+
+def test_live_backend_calibrates_compressed_profiles_at_actual_bytes():
+    """A compressed-ring job's timings are fit at the byte count its ring
+    actually sends: the refit recovers the *physical* link bandwidth
+    instead of inflating it ~4x (which Eq. (1) would then combine with the
+    already-compressed byte count, double-counting the saving)."""
+    from repro.core.rar_model import (
+        rar_compressed_bytes_per_worker,
+        rar_ring_bytes_per_worker,
+    )
+
+    b_true, d = 1e6, 100
+    prof = RarJobProfile(d=float(d), bandwidth=4e6, reduce_speed=float("inf"),
+                         t_fwd_per_sample=0.0, t_bwd=0.0, batch_size=8.0,
+                         compression="int8")
+    inst = _one_job_instance(horizon=2, profile=prof)
+
+    def secs(w):
+        # measured wall time of the int8 ring on a b_true-elem/s link
+        return rar_compressed_bytes_per_worker(d, w) / (4.0 * b_true)
+
+    tr = StubTrainer(timings_by_call=[{2: secs(2)}, {4: secs(4)}] * 2)
+    backend = LiveBackend({0: tr}, steps_per_slot=4)
+    OnlineDriver(inst, backend=backend).run(ColocTwo())
+    # samples were recorded at the compressed-equivalent element count
+    for s in backend.samples[0]:
+        ratio = (rar_compressed_bytes_per_worker(d, s.world)
+                 / rar_ring_bytes_per_worker(d, s.world, elem_bytes=4))
+        assert s.n_elements == pytest.approx(d * ratio)
+    # and the fit lands on the physical link rate, not ~4x above it
+    assert inst.jobs[0].profile.bandwidth == pytest.approx(b_true, rel=1e-6)
+    assert inst.jobs[0].profile.compression == "int8"  # layout survives refit

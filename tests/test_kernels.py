@@ -10,7 +10,18 @@ from hypothesis import strategies as st
 
 from repro.kernels import ops
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.ref import mha_reference, ssd_reference, wkv6_reference
+from repro.kernels.quant_ring import (
+    dequant_accumulate_pallas,
+    dequant_add_quantize_pallas,
+    quantize_pack_pallas,
+)
+from repro.kernels.ref import (
+    dequant_accumulate_reference,
+    mha_reference,
+    quantize_block_reference,
+    ssd_reference,
+    wkv6_reference,
+)
 from repro.kernels.rwkv6_wkv import wkv6_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 from repro.models.rwkv import DECAY_CLAMP, wkv6_chunked
@@ -172,3 +183,105 @@ def test_wkv_shape_sweep(s, h, p, chunk):
     ref, _ = wkv6_reference(r, k, v, logw, u)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# quantized-ring hop kernels (repro.kernels.quant_ring)
+# ---------------------------------------------------------------------------
+
+def _assert_quant_equiv(q, s, q_ref, s_ref):
+    """Pallas-interpret vs XLA oracle: scales may differ by 1 ULP (different
+    division lowering), which can shift a boundary value's int8 code by 1."""
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    assert int(np.abs(np.asarray(q, np.int32)
+                      - np.asarray(q_ref, np.int32)).max()) <= 1
+    np.testing.assert_allclose(np.asarray(q, np.float32) * np.asarray(s)[:, None],
+                               np.asarray(q_ref, np.float32)
+                               * np.asarray(s_ref)[:, None],
+                               atol=float(np.abs(np.asarray(s)).max()))
+
+
+@pytest.mark.parametrize("nb,block", [(1, 128), (3, 512), (16, 64), (7, 33)])
+def test_quantize_pack_matches_xla_reference(nb, block):
+    x = rand(jax.random.PRNGKey(0), (nb, block), scale=3.0)
+    q, s = quantize_pack_pallas(x, interpret=True)
+    q_ref, s_ref = quantize_block_reference(x)
+    _assert_quant_equiv(q, s, q_ref, s_ref)
+    # per-element round-off bounded by half the block's scale
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(s)[:, None]
+                 - np.asarray(x))
+    assert (err <= np.asarray(s)[:, None] / 2 + 1e-7).all()
+
+
+def test_quantize_pack_all_zero_blocks():
+    """All-zero sub-blocks quantize to scale 1.0 / payload 0 (well-defined
+    dequantization), including when only some rows are zero."""
+    x = jnp.zeros((4, 256), jnp.float32).at[2].set(1.0)
+    q, s = quantize_pack_pallas(x, interpret=True)
+    assert np.asarray(s)[0] == 1.0 and np.asarray(s)[3] == 1.0
+    assert np.asarray(s)[2] == pytest.approx(1.0 / 127.0)
+    assert (np.asarray(q)[[0, 1, 3]] == 0).all()
+    back = dequant_accumulate_pallas(q, s, None, interpret=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-7)
+
+
+@pytest.mark.parametrize("with_acc", [False, True])
+def test_dequant_accumulate_matches_xla_reference(with_acc):
+    keys = jax.random.split(jax.random.PRNGKey(1), 2)
+    x = rand(keys[0], (6, 384), scale=2.0)
+    q, s = quantize_block_reference(x)
+    acc = rand(keys[1], (6, 384)) if with_acc else None
+    out = dequant_accumulate_pallas(q, s, acc, interpret=True)
+    ref = dequant_accumulate_reference(q, s, acc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_dequant_add_quantize_matches_two_pass_composition():
+    """The one-pass hop kernel == quantize_pack(dequant_accumulate(...))."""
+    keys = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = rand(keys[0], (8, 256), scale=2.0)
+    acc = rand(keys[1], (8, 256), scale=2.0)
+    q, s = quantize_pack_pallas(x, interpret=True)
+    q1, s1 = dequant_add_quantize_pallas(q, s, acc, interpret=True)
+    two_pass = dequant_accumulate_pallas(q, s, acc, interpret=True)
+    q2, s2 = quantize_pack_pallas(two_pass, interpret=True)
+    _assert_quant_equiv(q1, s1, q2, s2)
+
+
+@given(
+    nb=st.integers(1, 12),
+    block=st.sampled_from([16, 33, 128, 512]),
+    scale=st.sampled_from([1e-3, 1.0, 50.0]),
+)
+@settings(max_examples=12, deadline=None)
+def test_quant_ring_kernels_shape_sweep(nb, block, scale):
+    x = rand(jax.random.PRNGKey(nb * block), (nb, block), scale=scale)
+    q, s = quantize_pack_pallas(x, interpret=True)
+    q_ref, s_ref = quantize_block_reference(x)
+    _assert_quant_equiv(q, s, q_ref, s_ref)
+    out = dequant_accumulate_pallas(q, s, x, interpret=True)
+    ref = dequant_accumulate_reference(q, s, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_quant_ring_rows_per_tile_validation():
+    x = jnp.ones((6, 128), jnp.float32)
+    with pytest.raises(ValueError, match="must divide"):
+        quantize_pack_pallas(x, interpret=True, rows_per_tile=4)
+    # a valid explicit tiling matches the default
+    q1, s1 = quantize_pack_pallas(x, interpret=True, rows_per_tile=2)
+    q2, s2 = quantize_pack_pallas(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_quant_ring_ops_wrappers_run():
+    x = rand(jax.random.PRNGKey(3), (4, 128))
+    q, s = ops.quantize_blockwise(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8 and s.shape == (4,)
+    out = ops.dequant_accumulate(q, s, x)
+    assert out.shape == x.shape and bool(jnp.isfinite(out).all())
+    deq = ops.dequant_accumulate(q, s)
+    np.testing.assert_allclose(np.asarray(out) - np.asarray(deq),
+                               np.asarray(x), atol=1e-6)

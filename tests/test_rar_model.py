@@ -95,3 +95,132 @@ def test_profile_from_arch_sane():
     assert 1 <= w <= 16
     # throughput at chosen w is at least that of w=1
     assert w / p.iteration_time(w) >= 1.0 / p.iteration_time(1)
+
+
+# ---------------------------------------------------------------------------
+# compressed wire layouts in Eq. (1) — the scheduler prices what the ring
+# actually sends (repro.dist.compression layouts)
+# ---------------------------------------------------------------------------
+
+def test_compressed_profile_prices_cheaper_wire():
+    """For a bandwidth-bound job the int8 profile's tau is strictly below
+    the f32 profile's, and w=1 still degenerates to compute-only."""
+    kw = dict(n_params=1.2e9, tokens_per_batch=4096 * 8)
+    f32 = profile_from_arch(**kw)
+    for comp in ("int8", "int8-fused"):
+        p = profile_from_arch(**kw, compression=comp)
+        assert float(p.iteration_time(8)) < float(f32.iteration_time(8))
+        assert float(p.iteration_time(1)) == pytest.approx(
+            float(f32.iteration_time(1)))
+        # wire term shrinks ~4x => comm fraction of tau drops accordingly
+        comm_f32 = float(f32.iteration_time(8) - f32.iteration_time(1))
+        comm_q = float(p.iteration_time(8) - p.iteration_time(1))
+        assert comm_q < comm_f32
+
+
+def test_fused_profile_halves_message_overhead():
+    """message_overhead is paid per ppermute: the fused layout issues half
+    the messages, so the gamma term halves exactly."""
+    import dataclasses
+
+    from repro.core.rar_model import compressed_ring_messages
+
+    base = profile_from_arch(n_params=1e8, tokens_per_batch=4096,
+                             compression="int8")
+    gamma = 1e-4
+    xla = dataclasses.replace(base, message_overhead=gamma)
+    fused = dataclasses.replace(base, message_overhead=gamma,
+                                compression="int8-fused")
+    w = 8
+    n_xla = compressed_ring_messages(w)
+    n_fused = compressed_ring_messages(w, fused=True)
+    assert n_fused * 2 == n_xla
+    delta = float(xla.iteration_time(w)) - float(fused.iteration_time(w))
+    # gamma saving minus the fused layout's (small) block-padding wire cost
+    from repro.core.rar_model import rar_compressed_bytes_per_worker
+
+    pad_cost = (rar_compressed_bytes_per_worker(base.d, w, fused=True)
+                - rar_compressed_bytes_per_worker(base.d, w)) / (
+        base.bandwidth * 4)
+    assert delta == pytest.approx((n_xla - n_fused) * gamma - pad_cost,
+                                  rel=1e-6)
+
+
+def test_unknown_compression_rejected():
+    with pytest.raises(ValueError, match="compression"):
+        rar_iteration_time(4, d=1e6, bandwidth=1e8, reduce_speed=1e9,
+                           t_fwd_per_sample=1e-4, t_bwd=1e-3, batch_size=8,
+                           compression="fp4")
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_compressed_formulas_array_matches_scalar(fused):
+    """The jnp-vectorized sweep path agrees with the exact scalar path."""
+    import jax.numpy as jnp
+
+    from repro.core.rar_model import (
+        compressed_rar_allreduce_time,
+        compressed_ring_messages,
+        rar_compressed_bytes_per_worker,
+    )
+
+    d = 1 << 20
+    ws = [1, 2, 3, 8, 33]
+    wa = jnp.asarray(ws, jnp.float32)
+    bytes_v = np.asarray(rar_compressed_bytes_per_worker(d, wa, fused=fused))
+    msgs_v = np.asarray(compressed_ring_messages(wa, fused=fused))
+    time_v = np.asarray(compressed_rar_allreduce_time(
+        wa, d, 1e8, 1e9, fused=fused, message_overhead=1e-5))
+    for i, w in enumerate(ws):
+        assert bytes_v[i] == pytest.approx(
+            rar_compressed_bytes_per_worker(d, w, fused=fused), rel=1e-6)
+        assert msgs_v[i] == compressed_ring_messages(w, fused=fused)
+        assert time_v[i] == pytest.approx(
+            compressed_rar_allreduce_time(w, d, 1e8, 1e9, fused=fused,
+                                          message_overhead=1e-5), rel=1e-6)
+
+
+def test_effective_iteration_time_respects_compression():
+    """Contended re-pricing keeps the compressed wire layout."""
+    from repro.core.rar_model import effective_iteration_time
+
+    p = profile_from_arch(n_params=1e9, tokens_per_batch=4096,
+                          compression="int8-fused")
+    f32 = profile_from_arch(n_params=1e9, tokens_per_batch=4096)
+    bw = p.bandwidth / 3.0  # fair-share slowdown
+    assert float(effective_iteration_time(p, bw, 8)) < float(
+        effective_iteration_time(f32, bw, 8))
+    assert float(effective_iteration_time(p, bw, 8)) > float(
+        p.iteration_time(8))
+
+
+def test_message_overhead_priced_uniformly_across_layouts():
+    """The per-ppermute gamma slice applies to every layout (one message
+    per hop for f32/fused, two for XLA int8), so with it set the fused
+    profile prices strictly below "int8" at realistic d — the scheduler can
+    actually prefer the single-ppermute hop."""
+    import dataclasses
+
+    from repro.core.rar_model import rar_ring_messages
+
+    gamma, w = 5e-6, 8
+    kw = dict(n_params=1.2e9, tokens_per_batch=4096 * 8,
+              message_overhead=gamma)
+    f32 = profile_from_arch(**kw)
+    xla = profile_from_arch(**kw, compression="int8")
+    fused = profile_from_arch(**kw, compression="int8-fused")
+    # uniform message counts: f32 and fused pay 2(w-1), XLA int8 4(w-1)
+    assert rar_ring_messages(w) == rar_ring_messages(
+        w, compression="int8-fused") == 2 * (w - 1)
+    assert rar_ring_messages(w, compression="int8") == 4 * (w - 1)
+    # message term is additive on top of the gamma-free pricing
+    for p in (f32, xla, fused):
+        free = dataclasses.replace(p, message_overhead=0.0)
+        assert float(p.iteration_time(w)) == pytest.approx(
+            float(free.iteration_time(w))
+            + rar_ring_messages(w, compression=p.compression) * gamma,
+            rel=1e-9)
+    # at d=1.2e9 the fused block padding is negligible next to the halved
+    # message count: fused < int8 < f32
+    assert float(fused.iteration_time(w)) < float(xla.iteration_time(w))
+    assert float(xla.iteration_time(w)) < float(f32.iteration_time(w))

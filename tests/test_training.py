@@ -200,3 +200,34 @@ def test_fault_tolerant_recovery(tmp_path):
         print("FT_OK", res)
     """)
     assert "FT_OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_fused_matches_compressed_training():
+    """The fused single-ppermute int8 ring trains loss-for-loss with the
+    XLA two-ppermute int8 ring (both quantize each hop; the fused path's
+    blockwise scales only tighten the rounding), and both stay close to the
+    exact-f32 ring trajectory at this scale."""
+    out = _run_subprocess("""
+        cfg = get_arch("granite-3-2b").reduced()
+        model = build_model(cfg)
+        data = SyntheticTokens(cfg.vocab, 16, 8, seed=1)
+
+        def run(mode):
+            # two slots at different ring sizes: the fused mode must survive
+            # the elastic reshard/re-form path, not just a fixed-w ring
+            tr = ElasticTrainer(model, make_optimizer("sgdm"), data,
+                                global_batch=8, base_lr=1e-2, mode=mode)
+            tr.run_slot(SlotPlan(workers=4, steps=2))
+            tr.run_slot(SlotPlan(workers=2, steps=2))
+            return np.array(tr.losses)
+
+        ring = run("ring")
+        xla = run("compressed")
+        fused = run("compressed-fused")
+        np.testing.assert_allclose(fused, xla, rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(fused, ring, rtol=5e-2, atol=5e-2)
+        assert fused[-1] < fused[0], fused
+        print("FUSEDTRAIN_OK", np.abs(fused - xla).max())
+    """)
+    assert "FUSEDTRAIN_OK" in out
