@@ -404,6 +404,78 @@ def compress_ring_bench(full: bool = False) -> None:
         emit("compress/fused_over_xla_int8", 0.0, f"speedup={speedup:.3f}")
 
 
+class _TimedScheduler:
+    """Delegating wrapper that records each ``schedule_slot`` wall time."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = f"{inner.name}+timed"
+        self.latencies_s: List[float] = []
+
+    def on_event(self, ev, ctx):
+        self.inner.on_event(ev, ctx)
+
+    def schedule_slot(self, ctx):
+        t0 = time.perf_counter()
+        out = self.inner.schedule_slot(ctx)
+        self.latencies_s.append(time.perf_counter() - t0)
+        return out
+
+
+def trace_scale_sweep(
+    points: Sequence[int] = (100, 1000, 10_000),
+    trace_path: Optional[str] = None,
+    horizon: int = 4,
+    n_servers: int = 50,
+    admission_window: Optional[int] = None,
+) -> None:
+    """ISSUE 6 scale benchmark: slot-decision latency vs queued-job count.
+
+    Replays a PAI-like trace (``repro.cluster.traces``) with every job queued
+    at slot 0 — the backlogged regime where the per-slot hot path is O(active
+    jobs) — and reports per-slot decision-latency percentiles for GADGET on
+    the paper's S=50 substrate. ``trace_path`` replays a CSV/JSONL trace file
+    at its own scale instead of synthesizing the sweep points. The admission
+    window (default: cluster GPU capacity — every embedded worker consumes a
+    full GPU, so no slot can serve more jobs than that) bounds candidate
+    generation; the acceptance bar is median latency < 1 s at 10k queued
+    jobs.
+    """
+    from repro.cluster.traces import (
+        jobs_from_trace,
+        load_trace,
+        synthesize_pai_like,
+    )
+
+    graph = make_fat_tree(n_servers=n_servers, seed=1)
+    total_gpus = int(graph.total_caps()["gpus"])
+    window = admission_window or total_gpus
+    if trace_path:
+        traces = [(None, load_trace(trace_path))]
+    else:
+        traces = [
+            (n, synthesize_pai_like(n_jobs=n, horizon=horizon, seed=3,
+                                    queued_fraction=1.0))
+            for n in points
+        ]
+    for n, records in traces:
+        n = n if n is not None else len(records)
+        jobs = jobs_from_trace(records, seed=4)
+        inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
+        sched = registry.create("gadget", seed=0)
+        sched.cfg.admission_window = window
+        timed = _TimedScheduler(sched)
+        res = OnlineDriver(inst).run(timed)
+        lat_ms = np.array(timed.latencies_s) * 1e3
+        emit(f"trace/gadget/jobs={n}", float(np.median(lat_ms)) * 1e3,
+             f"p50_ms={np.median(lat_ms):.1f};"
+             f"p90_ms={np.percentile(lat_ms, 90):.1f};"
+             f"max_ms={lat_ms.max():.1f};"
+             f"slots={horizon};window={window};"
+             f"workers_placed={sum(r.workers_placed for r in res.records)};"
+             f"total_utility={res.total_utility:.2f}")
+
+
 def eq1_rar_time_model(full: bool = False) -> None:
     """§III-3 table: tau(w) for a 1.2B-param job on v5e constants."""
     prof = profile_from_arch(n_params=1.2e9, tokens_per_batch=4096 * 8)
@@ -444,6 +516,18 @@ def main() -> None:
                              + " ".join(DEFAULT_SCHEDULERS))
     parser.add_argument("--json", metavar="PATH", default=None,
                         help="also dump the rows as a JSON artifact")
+    parser.add_argument("--trace", nargs="?", const=True, default=None,
+                        metavar="PATH",
+                        help="trace-replay benchmark: with PATH, replay that "
+                             "CSV/JSONL trace (repro.cluster.traces schema); "
+                             "bare, synthesize PAI-like workloads at the "
+                             "--scale-points sizes")
+    parser.add_argument("--scale-sweep", action="store_true",
+                        help="run the queued-job scale sweep (implies "
+                             "--trace)")
+    parser.add_argument("--scale-points", nargs="+", type=int,
+                        default=[100, 1000, 10_000], metavar="N",
+                        help="queued-job counts for the scale sweep")
     args = parser.parse_args()
     if args.list:
         for name in registry.available():
@@ -464,13 +548,19 @@ def main() -> None:
                   "only; other figures run their fixed scheduler",
                   file=sys.stderr)
     print("name,us_per_call,derived")
-    for name, fn in FIGS.items():
-        if args.only and name not in args.only:
-            continue
-        if name in COMPARISON_FIGS:
-            fn(full=args.full, schedulers=args.schedulers)
-        else:
-            fn(full=args.full)
+    if args.trace is not None or args.scale_sweep:
+        trace_scale_sweep(
+            points=args.scale_points,
+            trace_path=args.trace if isinstance(args.trace, str) else None,
+        )
+    else:
+        for name, fn in FIGS.items():
+            if args.only and name not in args.only:
+                continue
+            if name in COMPARISON_FIGS:
+                fn(full=args.full, schedulers=args.schedulers)
+            else:
+                fn(full=args.full)
     if args.json:
         import json
 

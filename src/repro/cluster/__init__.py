@@ -9,6 +9,13 @@ from repro.cluster.topology import (  # noqa: F401
     make_fat_tree,
 )
 from repro.cluster.trace import JobTraceConfig, generate_jobs  # noqa: F401
+from repro.cluster.traces import (  # noqa: F401
+    TraceJobRecord,
+    jobs_from_trace,
+    load_trace,
+    save_trace,
+    synthesize_pai_like,
+)
 from repro.cluster.simulator import (  # noqa: F401
     ClusterSimulator,
     ContentionConfig,

@@ -13,6 +13,7 @@ the paper's ranges:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional
 
 import numpy as np
@@ -44,24 +45,37 @@ class JobTraceConfig:
 def generate_jobs(cfg: JobTraceConfig) -> List[Job]:
     rng = np.random.default_rng(cfg.seed)
     # --- arrival times: bursty modulated Poisson (Google-trace-like) -------
-    arrivals: List[int] = []
+    # the process runs unclamped: once t crossed the horizon, the old code
+    # froze it at horizon-1 and every remaining arrival (plus its bursts)
+    # piled onto the final slot — large n_jobs traces ended in a spike of
+    # unrunnable jobs. Overflow is instead rescaled affinely onto the
+    # horizon below, preserving the monotone inter-arrival structure; runs
+    # that never overflow are bit-identical to the pre-fix generator.
+    raw: List[float] = []
     t = 0.0
-    while len(arrivals) < cfg.n_jobs:
+    while len(raw) < cfg.n_jobs:
         diurnal = 1.0 + 0.6 * np.sin(2 * np.pi * (t / max(cfg.horizon, 1)))
         gap = rng.exponential(cfg.mean_interarrival / max(diurnal, 0.2))
         t += gap
-        if t >= cfg.horizon:
-            # clamp overflow to the last slot: resampling uniformly here would
-            # break the monotone inter-arrival process and scatter late
-            # arrivals across the horizon
-            t = float(cfg.horizon - 1)
-        arrivals.append(int(t))
+        raw.append(t)
         if rng.random() < cfg.burst_prob:
             for _ in range(cfg.burst_size):
-                if len(arrivals) >= cfg.n_jobs:
+                if len(raw) >= cfg.n_jobs:
                     break
-                arrivals.append(int(min(t + rng.integers(0, 2), cfg.horizon - 1)))
-    arrivals = sorted(arrivals[: cfg.n_jobs])
+                raw.append(t + float(rng.integers(0, 2)))
+    raw = raw[: cfg.n_jobs]
+    peak = max(raw)
+    if peak >= cfg.horizon:
+        scale = (cfg.horizon - 1) / peak
+        warnings.warn(
+            f"arrival process overran the horizon (last arrival at slot "
+            f"{peak:.1f} >= {cfg.horizon}); rescaling inter-arrival times "
+            f"by {scale:.3f} — lower n_jobs, raise horizon, or raise "
+            f"mean_interarrival to avoid the compression",
+            stacklevel=2,
+        )
+        raw = [x * scale for x in raw]
+    arrivals = sorted(int(x) for x in raw)
 
     jobs: List[Job] = []
     for i, a in enumerate(arrivals):

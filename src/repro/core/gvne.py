@@ -31,6 +31,7 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+import scipy.sparse as sp
 
 from repro.cluster.topology import Edge, Embedding, ResourceState, SubstrateGraph
 from repro.core.lp import LPResult, pdhg_solve, solve_ilp, solve_lp
@@ -58,6 +59,19 @@ class GvneConfig:
     lp_engine: str = "highs"    # "highs" | "pdhg"
     seed: int = 0
     max_servers_per_ring: int = 8
+    # hot-path controls (ISSUE 6). ``vectorized`` switches steps 1-2 to one
+    # shared numpy caps matrix per slot instead of a per-(job, kappa) dict
+    # rebuild — decisions are bit-identical either way (pinned by tests);
+    # keep the False path as the reference implementation.
+    vectorized: bool = True
+    # ``admission_window`` caps how many active jobs enter candidate
+    # generation per slot, keeping the top-K by single-worker marginal
+    # utility (the greedy density Lemma 7 scores by). None = paper
+    # semantics (every active job). A cluster of C GPUs can place at most C
+    # workers per slot, so a window of a few multiples of C preserves the
+    # plausible LP support while making the slot decision O(window) instead
+    # of O(active jobs) — the knob behind the 10k-job scale benchmark.
+    admission_window: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -91,6 +105,46 @@ def worker_upper_bound(res: ResourceState, job: Job, remaining: float) -> int:
         packable += res.max_workers_on_server(s.id, job.demands,
                                               cap=job.max_workers)
     return int(max(0, math.floor(min(job.max_workers, remaining, packable) + 1e-9)))
+
+
+def slot_caps_matrix(
+    res: ResourceState, jobs: Sequence[Job]
+) -> Tuple[List[int], np.ndarray]:
+    """One vectorized packability matrix per slot: ``caps[j, s]``.
+
+    Row j holds, for every server (in ``graph.servers`` order), the same
+    value ``max_workers_on_server(s, jobs[j].demands, cap=jobs[j].
+    max_workers)`` computes — min over positive demands of
+    ``floor(free/l + 1e-9)``, bounded by N_i (N_i alone when no demand entry
+    is positive). Computed once and shared by every ``worker_upper_bound``
+    and ``generate_candidates`` call of the slot, replacing the O(S) dict
+    rebuild those did per (job, kappa).
+
+    Returns ``(server_ids, caps)`` with ``server_ids`` in ``graph.servers``
+    order (the candidate generators' eligible-server iteration order, so RNG
+    draws are unchanged).
+    """
+    servers = res.graph.servers
+    server_ids = [s.id for s in servers]
+    rtypes = sorted({r for j in jobs for r in j.demands})
+    for j in jobs:
+        if not j.demands:
+            raise ValueError("max_workers_on_server: empty demand vector")
+    free = np.array(
+        [[res.free_node[sid].get(r, 0.0) for r in rtypes]
+         for sid in server_ids],
+        dtype=np.float64,
+    )                                                   # S x R
+    dem = np.array([[j.demands.get(r, 0.0) for r in rtypes] for j in jobs],
+                   dtype=np.float64)                    # J x R
+    n_i = np.array([max(0, int(j.max_workers)) for j in jobs], dtype=np.int64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = free[None, :, :] / dem[:, None, :]      # J x S x R
+    ratio = np.where(dem[:, None, :] > 0.0, ratio, np.inf)
+    lim = ratio.min(axis=2)                             # J x S
+    caps = np.minimum(np.floor(lim + 1e-9), n_i[:, None].astype(np.float64))
+    caps = np.where(np.isinf(lim), n_i[:, None].astype(np.float64), caps)
+    return server_ids, np.maximum(caps, 0.0).astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -150,14 +204,22 @@ def generate_candidates(
     pi: float,
     cfg: GvneConfig,
     rng: np.random.Generator,
+    caps: Optional[Dict[int, int]] = None,
 ) -> List[Candidate]:
-    """Randomized-greedy candidate rings of size kappa for one job."""
+    """Randomized-greedy candidate rings of size kappa for one job.
+
+    ``caps`` is the job's per-server packability (one dict in
+    ``graph.servers`` order, e.g. a row of :func:`slot_caps_matrix`); when
+    omitted it is rebuilt here — the pre-vectorization O(S) per-call path.
+    """
     out: List[Candidate] = []
     seen = set()
-    caps = {
-        s.id: res.max_workers_on_server(s.id, job.demands, cap=job.max_workers)
-        for s in res.graph.servers
-    }
+    if caps is None:
+        caps = {
+            s.id: res.max_workers_on_server(s.id, job.demands,
+                                            cap=job.max_workers)
+            for s in res.graph.servers
+        }
     eligible = [s for s, c in caps.items() if c >= 1]
     if not eligible:
         return out
@@ -277,8 +339,15 @@ def _compositions(total: int, parts: int):
 
 def _build_lp(
     cands: List[Candidate], res: ResourceState
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, List[str]]:
-    """Rows: per-job sum(phi) <= 1; node capacity (s, r); edge capacity."""
+) -> Tuple[sp.csr_matrix, np.ndarray, np.ndarray, List[str]]:
+    """Rows: per-job sum(phi) <= 1; node capacity (s, r); edge capacity.
+
+    The constraint matrix is returned as ``scipy.sparse.csr_matrix``: each
+    candidate column touches one job row plus its own ring's servers/edges,
+    so density is ~(ring size)/m — the dense ``np.zeros((m, n))`` this
+    replaces dominated the slot decision at thousands of candidates. HiGHS
+    (``linprog``/``milp``) consumes the sparse matrix natively.
+    """
     jobs = sorted({c.job_id for c in cands})
     job_row = {j: k for k, j in enumerate(jobs)}
     node_keys = sorted({k for c in cands for k in c.node_demand})
@@ -287,7 +356,6 @@ def _build_lp(
     edge_row = {e: len(jobs) + len(node_keys) + i for i, e in enumerate(edge_keys)}
     m = len(jobs) + len(node_keys) + len(edge_keys)
     n = len(cands)
-    A = np.zeros((m, n))
     b = np.zeros(m)
     for j, r in job_row.items():
         b[r] = 1.0
@@ -295,12 +363,24 @@ def _build_lp(
         b[row] = res.free_node[s].get(r, 0.0)
     for e, row in edge_row.items():
         b[row] = res.admissible_edge_capacity(e)
+    rows: List[int] = []
+    cols: List[int] = []
+    vals: List[float] = []
     for col, c in enumerate(cands):
-        A[job_row[c.job_id], col] = 1.0
+        rows.append(job_row[c.job_id])
+        cols.append(col)
+        vals.append(1.0)
         for k, v in c.node_demand.items():
-            A[node_row[k], col] = v
+            rows.append(node_row[k])
+            cols.append(col)
+            vals.append(v)
         for e, v in c.edge_demand.items():
-            A[edge_row[e], col] = v
+            rows.append(edge_row[e])
+            cols.append(col)
+            vals.append(v)
+    A = sp.coo_matrix(
+        (vals, (rows, cols)), shape=(m, n), dtype=np.float64
+    ).tocsr()
     names = [f"job{j}" for j in jobs] + [f"node{k}" for k in node_keys] + [
         f"edge{e}" for e in edge_keys
     ]
@@ -573,17 +653,50 @@ def solve_slot(
     """Algorithm 2 (LP-RS-MDE) for one time slot."""
     cfg = cfg or GvneConfig()
     rng = np.random.default_rng(cfg.seed)
+    jobs = list(jobs)
+    n_active = len(jobs)
+
+    # admission window: keep the top-K active jobs by single-worker marginal
+    # utility (the density Lemma 7 scores by), preserving relative order so
+    # the RNG consumption sequence only depends on the admitted set
+    if cfg.admission_window is not None and n_active > cfg.admission_window:
+        ranked = sorted(
+            range(n_active),
+            key=lambda k: (-state.marginal_utility(jobs[k], 1), k),
+        )
+        jobs = [jobs[k] for k in sorted(ranked[: cfg.admission_window])]
     job_map = {j.id: j for j in jobs}
 
-    # steps 1-2: bounds + candidates for every kappa in {1..q_i}
+    # steps 1-2: bounds + candidates for every kappa in {1..q_i}. The
+    # vectorized path computes one packability matrix for the whole slot and
+    # shares each job's row across its kappas — bit-identical values to the
+    # per-call worker_upper_bound/generate_candidates rebuild (the caps are
+    # integers and res is not mutated until step 7's scratch clone).
+    caps_rows: List[Optional[Dict[int, int]]]
+    if cfg.vectorized and jobs:
+        server_ids, caps_mat = slot_caps_matrix(res, jobs)
+        caps_rows = [
+            {sid: int(caps_mat[k, i]) for i, sid in enumerate(server_ids)}
+            for k in range(len(jobs))
+        ]
+    else:
+        caps_rows = [None] * len(jobs)
     cands: List[Candidate] = []
-    for job in jobs:
-        q = worker_upper_bound(res, job, state.remaining(job))
+    for job, caps in zip(jobs, caps_rows):
+        if caps is None:
+            q = worker_upper_bound(res, job, state.remaining(job))
+        else:
+            packable = int(sum(caps.values()))
+            q = int(max(0, math.floor(
+                min(job.max_workers, state.remaining(job), packable) + 1e-9
+            )))
         for kappa in range(1, q + 1):
             pi = state.marginal_utility(job, kappa)
             if pi <= 0:
                 continue
-            cands.extend(generate_candidates(res, job, kappa, pi, cfg, rng))
+            cands.extend(
+                generate_candidates(res, job, kappa, pi, cfg, rng, caps=caps)
+            )
     if not cands:
         return GvneResult([], 0.0, 0.0, 0.0, 0, True, {"n_candidates": 0})
 
@@ -650,7 +763,8 @@ def solve_slot(
             "n_candidates": float(len(cands)),
             "n_aug": float(len(aug)),
             "n_jobs_embedded": float(len(embeddings)),
-            "n_jobs_active": float(len(jobs)),
+            "n_jobs_active": float(n_active),
+            "n_jobs_admitted": float(len(jobs)),
         },
     )
 

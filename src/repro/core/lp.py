@@ -125,6 +125,8 @@ def pdhg_solve(
     Equality rows should be pre-split into two inequalities by the caller.
     Step sizes: tau * sigma * ||A||^2 < 1 with ||A|| from power iteration.
     """
+    if sp.issparse(A_ub):  # JAX has no sparse matmul here — densify
+        A_ub = A_ub.toarray()
     A = jnp.asarray(A_ub, dtype=jnp.float32)
     c_j = jnp.asarray(c, dtype=jnp.float32)
     b_j = jnp.asarray(b_ub, dtype=jnp.float32)

@@ -56,23 +56,58 @@ class DDLJSInstance:
         return self._by_id()[jid]
 
     def _by_id(self) -> Dict[int, Job]:
-        if not hasattr(self, "_jmap"):
-            self._jmap = {j.id: j for j in self.jobs}
-        return self._jmap
+        """Id -> Job map, rebuilt whenever ``jobs`` has been mutated.
+
+        Trace adapters append jobs to an existing instance; a once-built map
+        would make those invisible to :meth:`job`. A length check catches the
+        append pattern (the only supported mutation — replacing a job in
+        place while keeping the count is not).
+        """
+        jmap = getattr(self, "_jmap", None)
+        if jmap is None or len(jmap) != len(self.jobs):
+            jmap = self._jmap = {j.id: j for j in self.jobs}
+        return jmap
 
 
 class ScheduleState:
-    """Accumulated worker-time z_{i,t} and the active-set logic of §V-B."""
+    """Accumulated worker-time z_{i,t} and the active-set logic of §V-B.
+
+    ``z`` is owned by :meth:`commit_slot` — the per-job utility cache behind
+    :meth:`total_utility` is refreshed there (and on every
+    :meth:`job_utility` call), so mutating ``z`` directly bypasses the
+    accounting and leaves the cached utilities stale.
+    """
 
     def __init__(self, inst: DDLJSInstance):
         self.inst = inst
         self.z: Dict[int, float] = {j.id: 0.0 for j in inst.jobs}
         self.history: Dict[int, List[Embedding]] = {j.id: [] for j in inst.jobs}
-        self.utility_cache: Dict[int, float] = {}
+        # per-job caches keyed by job id: the worker-time budget is a pure
+        # function of the (immutable) demands/budgets, and the utility only
+        # changes when z does — both used to be recomputed O(jobs) per slot
+        self._wtb: Dict[int, float] = {
+            j.id: j.worker_time_budget() for j in inst.jobs
+        }
+        self._util: Dict[int, float] = {
+            j.id: j.utility(j.zeta * 0.0) for j in inst.jobs
+        }
+
+    def _ensure(self, job: Job) -> None:
+        """Admit a job appended to ``inst.jobs`` after this state was built
+        (the trace-adapter pattern) into the accounting dicts."""
+        if job.id not in self.z:
+            self.z[job.id] = 0.0
+            self.history[job.id] = []
+            self._wtb[job.id] = job.worker_time_budget()
+            self._util[job.id] = job.utility(job.zeta * 0.0)
 
     def remaining(self, job: Job) -> float:
         """Remaining worker-time: (min_r F_i^r / l_i^r) - z_{i,t-1} (Eq. (11))."""
-        return max(0.0, job.worker_time_budget() - self.z[job.id])
+        wtb = self._wtb.get(job.id)
+        if wtb is None:
+            self._ensure(job)
+            wtb = self._wtb[job.id]
+        return max(0.0, wtb - self.z[job.id])
 
     def active_jobs(self, t: int) -> List[Job]:
         """I[t] = {i : t >= a_i and z_{i,t-1} < min_r F_i^r / l_i^r}."""
@@ -98,14 +133,39 @@ class ScheduleState:
         if len(factors) != len(embeddings):
             raise ValueError("commit_slot: one factor per embedding required")
         for e, f in zip(embeddings, factors):
+            if e.job_id not in self.z:
+                self._ensure(self.inst.job(e.job_id))
             self.z[e.job_id] += f * e.n_workers
             self.history[e.job_id].append(e)
+        # refresh the utility cache for the touched jobs only — total_utility
+        # then sums cached values instead of re-evaluating every job's
+        # utility function each slot
+        for jid in {e.job_id for e in embeddings}:
+            job = self.inst.job(jid)
+            self._util[jid] = job.utility(job.zeta * self.z[jid])
 
     def job_utility(self, job: Job) -> float:
-        return job.utility(job.zeta * self.z[job.id])
+        self._ensure(job)
+        u = job.utility(job.zeta * self.z[job.id])
+        self._util[job.id] = u
+        return u
 
     def total_utility(self) -> float:
-        return sum(self.job_utility(j) for j in self.inst.jobs)
+        """Sum of per-job utilities at the current z.
+
+        Reads the per-job cache (refreshed in :meth:`commit_slot`) in
+        ``inst.jobs`` order with a plain Python sum, so the value is
+        bit-identical to re-evaluating ``job_utility`` for every job — only
+        the O(jobs) utility-function evaluations per call are gone.
+        """
+        util = self._util
+        total = 0.0
+        for j in self.inst.jobs:
+            u = util.get(j.id)
+            if u is None:  # appended after this state was built
+                u = self.job_utility(j)
+            total += u
+        return total
 
     def marginal_utility(self, job: Job, extra_workers: int) -> float:
         """pi_{i,kappa}: mu(zeta(z + kappa)) - mu(zeta z) — §V-C."""

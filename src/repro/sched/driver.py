@@ -134,10 +134,22 @@ class OnlineDriver:
         completion: Dict[int, Optional[int]] = {j.id: None for j in inst.jobs}
         log: List[ClusterEvent] = []
 
+        # -- per-run indexes: replace the O(jobs)-per-slot scans ------------
+        # arrival index: jobs grouped by a_i, preserving inst.jobs order
+        arrivals_at: Dict[int, List[int]] = {}
+        for j in inst.jobs:
+            arrivals_at.setdefault(j.arrival, []).append(j.id)
+        # completion index: a job's remaining budget only changes through
+        # commit_slot, so after the initial sweep (which catches zero-budget
+        # jobs) only jobs committed this slot can newly complete
+        job_order = {j.id: k for k, j in enumerate(inst.jobs)}
+        jobs_by_id = {j.id: j for j in inst.jobs}
+        pending = set(job_order)
+
         for t in range(inst.horizon):
             # -- pre-slot events: arrivals + repairs + straggler transitions
             pre: List[ClusterEvent] = [SlotTick(t)]
-            pre += [JobArrival(t, j.id) for j in inst.jobs if j.arrival == t]
+            pre += [JobArrival(t, jid) for jid in arrivals_at.get(t, ())]
             pre += stream.pre_slot(t)
             for ev in pre:
                 if isinstance(ev, ServerRecovery):
@@ -181,6 +193,10 @@ class OnlineDriver:
                 if isinstance(ev, ServerFailure):
                     wave.add(ev.server_id)
                     failed.add(ev.server_id)
+                    # a downed server stops straggling (the pre-slot branch
+                    # already did this); without the pop a recovered server
+                    # kept being priced at straggler speed
+                    straggling.pop(ev.server_id, None)
                 elif isinstance(ev, ServerRecovery):
                     failed.discard(ev.server_id)
                 elif isinstance(ev, StragglerOnset):  # affects later slots
@@ -216,10 +232,20 @@ class OnlineDriver:
             # z + history accounting via the single shared path
             state.commit_slot(committed, outcome.factors)
 
-            for j in inst.jobs:
-                if completion[j.id] is None and state.remaining(j) <= 1e-9:
-                    completion[j.id] = t
-                    ev = JobCompletion(t, j.id)
+            # completion check over the candidate set only: the initial sweep
+            # (t=0) covers jobs whose budget starts exhausted; afterwards only
+            # jobs whose z changed this slot can cross the threshold. Checked
+            # in inst.jobs order, so the event log is identical to a full
+            # per-slot sweep.
+            if t == 0:
+                candidates = list(pending)
+            else:
+                candidates = {e.job_id for e in committed} & pending
+            for jid in sorted(candidates, key=job_order.__getitem__):
+                if state.remaining(jobs_by_id[jid]) <= 1e-9:
+                    pending.discard(jid)
+                    completion[jid] = t
+                    ev = JobCompletion(t, jid)
                     log.append(ev)
                     sched.on_event(ev, ctx)
 

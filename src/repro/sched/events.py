@@ -139,7 +139,10 @@ class FaultEventStream(EventStream):
     per-server: repair draw only while failed, straggler draw only while
     healthy, failure draw only while up — short-circuits and all), so a
     driver consuming this stream is bit-identical to the retired loop for
-    any seed.
+    any seed. One deliberate divergence from the retired loop: a server that
+    fails *while straggling* drops its straggler state at the failure (no
+    stray ``StragglerEnd`` later, a fresh ``StragglerOnset`` if it straggles
+    again after recovery), matching the driver's accounting.
     """
 
     def __init__(self, server_ids: Sequence[int], cfg: FaultConfig):
@@ -175,6 +178,11 @@ class FaultEventStream(EventStream):
             if not self._failed[sid] \
                     and self.rng.random() < self.cfg.server_fail_prob:
                 self._failed[sid] = True
+                # a downed server stops straggling, matching the driver's
+                # accounting (which drops the straggler factor on a mid-slot
+                # failure) — after recovery a fresh draw emits a fresh
+                # StragglerOnset instead of silently resuming the old one
+                self._straggling[sid] = False
                 out.append(ServerFailure(t, sid))
         return out
 

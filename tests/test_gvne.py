@@ -139,3 +139,66 @@ def test_solve_slot_never_double_embeds_property(seed):
     for e in result.embeddings:
         e.validate_ring()
         assert 1 <= e.n_workers <= inst.job(e.job_id).max_workers
+
+
+def test_vectorized_path_bit_identical_to_reference():
+    """ISSUE 6 determinism pin: the one-matrix-per-slot packability path must
+    reproduce the per-(job, kappa) dict-rebuild reference exactly — same
+    embeddings, same LP value, same diagnostics — for a spread of seeds."""
+    for seed in range(4):
+        graph, jobs, inst = make_small(n_servers=6, n_jobs=8, seed=seed)
+        state = ScheduleState(inst)
+        fast = solve_slot(ResourceState(graph), jobs, state,
+                          GvneConfig(seed=seed, vectorized=True))
+        ref = solve_slot(ResourceState(graph), jobs, state,
+                         GvneConfig(seed=seed, vectorized=False))
+        assert fast.embeddings == ref.embeddings
+        assert fast.lp_value == ref.lp_value
+        assert fast.rounded_value == ref.rounded_value
+        assert fast.value == ref.value
+        assert fast.n_rounds == ref.n_rounds
+        assert fast.diagnostics == ref.diagnostics
+
+
+def test_slot_caps_matrix_matches_scalar_packability():
+    """Each caps-matrix entry equals max_workers_on_server for that (job,
+    server) pair, including zero-free-capacity and N_i-bound corners."""
+    from repro.core.gvne import slot_caps_matrix
+
+    graph, jobs, inst = make_small(n_servers=6, n_jobs=8, seed=3)
+    res = ResourceState(graph)
+    # drain one server to exercise the zero row
+    sid0 = graph.servers[0].id
+    for r in res.free_node[sid0]:
+        res.free_node[sid0][r] = 0.0
+    server_ids, caps = slot_caps_matrix(res, jobs)
+    assert server_ids == [s.id for s in graph.servers]
+    for k, j in enumerate(jobs):
+        for i, sid in enumerate(server_ids):
+            assert caps[k, i] == res.max_workers_on_server(
+                sid, j.demands, cap=j.max_workers)
+
+
+def test_slot_caps_matrix_rejects_empty_demands():
+    from repro.core.gvne import slot_caps_matrix
+
+    graph, jobs, inst = make_small(n_servers=4, n_jobs=2, seed=0)
+    jobs[1].demands = {}
+    with pytest.raises(ValueError):
+        slot_caps_matrix(ResourceState(graph), jobs)
+
+
+def test_admission_window_caps_candidate_jobs():
+    """admission_window=K admits only the top-K jobs by single-worker
+    marginal utility; None keeps every active job (paper semantics)."""
+    graph, jobs, inst = make_small(n_servers=6, n_jobs=8, seed=5)
+    state = ScheduleState(inst)
+    full = solve_slot(ResourceState(graph), jobs, state, GvneConfig(seed=0))
+    assert full.diagnostics["n_jobs_admitted"] == float(len(jobs))
+    windowed = solve_slot(ResourceState(graph), jobs, state,
+                          GvneConfig(seed=0, admission_window=3))
+    assert windowed.diagnostics["n_jobs_admitted"] == 3.0
+    assert windowed.diagnostics["n_jobs_active"] == float(len(jobs))
+    top = sorted(jobs, key=lambda j: -state.marginal_utility(j, 1))[:3]
+    admitted_ids = {e.job_id for e in windowed.embeddings}
+    assert admitted_ids <= {j.id for j in top}

@@ -391,3 +391,86 @@ def test_greedy_cycle_place_breaks_capacity_ties_by_server_id():
     # spread: 6 workers over tied servers -> ids 0,1 first
     emb = greedy_cycle_place(ResourceState(graph), job, 6)
     assert sorted(emb.servers) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# driver accounting regressions (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def test_mid_slot_failure_clears_straggler_state():
+    """Regression: a mid-slot ServerFailure added the server to ``failed``
+    but never cleared it from ``straggling`` (the pre-slot branch does
+    both); after recovery a healthy server was still priced at straggler
+    speed."""
+    from repro.sched import ServerRecovery
+
+    inst = _one_job_instance(horizon=3)
+    out = OnlineDriver(
+        inst,
+        events=ScriptedEventStream(
+            pre=[StragglerOnset(0, server_id=0, factor=0.25),
+                 ServerRecovery(1, server_id=0)],
+            mid=[ServerFailure(0, server_id=0)]),
+    ).run(ColocTwo())
+    # slot 0: ring placed on the straggling server, then voided by the wave
+    assert out.records[0].lost_embeddings == 1
+    assert out.records[0].effective_worker_time == pytest.approx(0.0)
+    # slots 1-2: server recovered and healthy -> full 2 worker-time per slot
+    # (with the stale straggler factor these credited 0.5 each)
+    assert out.records[1].effective_worker_time == pytest.approx(2.0)
+    assert out.records[2].effective_worker_time == pytest.approx(2.0)
+    assert out.state.z[0] == pytest.approx(4.0)
+
+
+def test_fault_stream_reemits_straggler_onset_after_failure():
+    """A straggling server that fails drops its straggler state: if it
+    straggles again after recovery the stream emits a *fresh*
+    StragglerOnset (instead of silently resuming the old one, which the
+    driver — having cleared the straggler at the failure — would miss)."""
+    from repro.sched.events import FaultConfig, FaultEventStream
+
+    for seed in range(40):
+        cfg = FaultConfig(server_fail_prob=0.5, repair_prob=0.9,
+                          straggler_prob=0.6, seed=seed)
+        stream = FaultEventStream([0], cfg)
+        straggling = False
+        for t in range(30):
+            for ev in stream.pre_slot(t):
+                if isinstance(ev, StragglerOnset):
+                    # never an onset while already marked straggling
+                    assert not straggling
+                    straggling = True
+                else:
+                    straggling = False  # StragglerEnd / recovery bookkeeping
+            for ev in stream.mid_slot(t):
+                if isinstance(ev, ServerFailure):
+                    straggling = False
+
+
+def test_zero_budget_job_completes_at_slot_zero():
+    """Pin for the indexed completion sweep: a job whose budget starts
+    exhausted is marked complete in the initial sweep, like the full
+    per-slot scan used to do."""
+    inst = _one_job_instance(horizon=2, budget=0.0)
+    out = OnlineDriver(inst).run(ColocTwo())
+    assert out.completion_slot == {0: 0}
+    completions = [e for e in out.events if isinstance(e, JobCompletion)]
+    assert [(e.t, e.job_id) for e in completions] == [(0, 0)]
+
+
+def test_driver_run_bit_identical_across_gvne_paths():
+    """ISSUE 6 determinism pin at the driver level: a full seeded run —
+    records, z accumulators, and event log — is identical whether G-VNE uses
+    the vectorized caps matrix or the reference per-call rebuild."""
+    jobs = generate_jobs(JobTraceConfig(n_jobs=24, horizon=16, seed=7))
+    inst = DDLJSInstance(graph=make_fat_tree(), jobs=jobs, horizon=16)
+    results = []
+    for vectorized in (True, False):
+        sched = registry.create("gadget")
+        sched.cfg.vectorized = vectorized
+        results.append(OnlineDriver(inst).run(sched))
+    fast, ref = results
+    assert fast.records == ref.records
+    assert fast.state.z == ref.state.z
+    assert fast.events == ref.events
+    assert fast.completion_slot == ref.completion_slot

@@ -1,6 +1,7 @@
 """Arrival-process sanity for generate_jobs (bursty-Poisson shape)."""
 
 import numpy as np
+import pytest
 
 from repro.cluster.trace import JobTraceConfig, generate_jobs
 
@@ -12,20 +13,36 @@ def test_arrivals_within_horizon_and_sorted():
     assert arrivals == sorted(arrivals)
 
 
-def test_overflow_clamps_to_last_slot_not_uniform():
-    """Regression: overruns used to be resampled uniformly over the horizon,
-    breaking the monotone inter-arrival process; they must clamp instead."""
+def test_overflow_rescales_instead_of_piling_on_last_slot():
+    """Regression (ISSUE 6): once t crossed the horizon, every remaining
+    arrival (and its bursts) used to clamp onto slot horizon-1, so large
+    traces ended in a spike of unrunnable jobs. Overflow now rescales the
+    whole arrival sequence affinely onto [0, horizon-1] with a warning —
+    monotone structure preserved, no terminal pile-up."""
     cfg = JobTraceConfig(n_jobs=200, horizon=50, mean_interarrival=2.0,
                          burst_prob=0.0, seed=1)
-    arrivals = np.array([j.arrival for j in generate_jobs(cfg)])
+    with pytest.warns(UserWarning, match="overran the horizon"):
+        arrivals = np.array([j.arrival for j in generate_jobs(cfg)])
+    assert arrivals.min() >= 0
     assert arrivals.max() == cfg.horizon - 1
-    # the overflow mass piles on the final slot (the clamp), instead of being
-    # scattered uniformly across mid-horizon slots
-    assert (arrivals == cfg.horizon - 1).mean() > 0.5
-    # slots *before* the exponential ramp reaches the end stay plausible:
-    # nothing lands in a band the process never visited
-    pre_overflow = arrivals[arrivals < cfg.horizon - 1]
-    assert pre_overflow.max() < cfg.horizon - 1
+    assert list(arrivals) == sorted(arrivals)
+    # no pile-up: the final slot holds a sliver of the mass, not the bulk
+    assert (arrivals == cfg.horizon - 1).mean() < 0.1
+    # the affine rescale spreads arrivals across the whole horizon: every
+    # quarter of the horizon sees a meaningful share of the 200 jobs
+    quarters = np.histogram(arrivals, bins=4, range=(0, cfg.horizon))[0]
+    assert quarters.min() >= 10
+
+
+@pytest.mark.filterwarnings("error")
+def test_no_overflow_draws_no_warning_and_stays_deterministic():
+    """Runs that never overrun the horizon rescale nothing and warn nothing
+    (bit-identical to the pre-fix generator), and the seeded draw repeats."""
+    cfg = JobTraceConfig(n_jobs=40, horizon=500, mean_interarrival=2.0,
+                         seed=3)
+    arrivals = [j.arrival for j in generate_jobs(cfg)]
+    assert max(arrivals) < cfg.horizon
+    assert arrivals == [j.arrival for j in generate_jobs(cfg)]
 
 
 def test_interarrival_mean_matches_config_without_overflow():

@@ -1,0 +1,113 @@
+"""Trace schema, I/O round-trips, replay mapping, and synthesizer shape
+(ISSUE 6 trace-replay layer)."""
+
+import numpy as np
+import pytest
+
+from repro.cluster.traces import (
+    BANDWIDTH_CLASSES,
+    TRACE_COLUMNS,
+    TraceJobRecord,
+    jobs_from_trace,
+    load_trace,
+    save_trace,
+    synthesize_pai_like,
+)
+
+
+def _rec(**kw):
+    base = dict(job_id=0, submit_slot=3, gpu_count=4, duration_slots=12.5,
+                bandwidth_class="medium", priority=42.0)
+    base.update(kw)
+    return TraceJobRecord(**base)
+
+
+def test_record_validation():
+    with pytest.raises(ValueError):
+        _rec(bandwidth_class="turbo")
+    with pytest.raises(ValueError):
+        _rec(gpu_count=0)
+    with pytest.raises(ValueError):
+        _rec(submit_slot=-1)
+    with pytest.raises(ValueError):
+        _rec(duration_slots=0.0)
+    assert _rec().bandwidth == BANDWIDTH_CLASSES["medium"]
+
+
+@pytest.mark.parametrize("ext", ["csv", "jsonl"])
+def test_roundtrip(tmp_path, ext):
+    records = synthesize_pai_like(n_jobs=50, horizon=40, seed=3)
+    path = tmp_path / f"trace.{ext}"
+    save_trace(records, path)
+    assert load_trace(path) == records
+
+
+def test_load_rejects_unknown_extension(tmp_path):
+    with pytest.raises(ValueError):
+        load_trace(tmp_path / "trace.parquet")
+
+
+def test_load_csv_rejects_missing_columns(tmp_path):
+    path = tmp_path / "bad.csv"
+    path.write_text("job_id,submit_slot\n0,1\n")
+    with pytest.raises(ValueError, match="missing trace columns"):
+        load_trace(path)
+
+
+def test_jobs_from_trace_maps_schema_verbatim():
+    rec = _rec()
+    (job,) = jobs_from_trace([rec], seed=0)
+    assert job.id == rec.job_id
+    assert job.arrival == rec.submit_slot
+    assert job.max_workers == rec.gpu_count
+    assert job.bandwidth == rec.bandwidth
+    # l_i^gpus = 1, so the worker-time budget is gpus * duration exactly
+    assert job.worker_time_budget() == pytest.approx(
+        rec.gpu_count * rec.duration_slots)
+
+
+def test_jobs_from_trace_seeded_determinism():
+    records = synthesize_pai_like(n_jobs=30, horizon=20, seed=1)
+    a = jobs_from_trace(records, seed=5)
+    b = jobs_from_trace(records, seed=5)
+    assert [(j.zeta, j.bandwidth, j.arrival) for j in a] == \
+        [(j.zeta, j.bandwidth, j.arrival) for j in b]
+    c = jobs_from_trace(records, seed=6)
+    assert [j.zeta for j in a] != [j.zeta for j in c]
+
+
+def test_synthesize_pai_like_shape():
+    records = synthesize_pai_like(n_jobs=5000, horizon=100, seed=0)
+    assert len(records) == 5000
+    assert len({r.job_id for r in records}) == 5000
+    gpus = np.array([r.gpu_count for r in records])
+    # heavy-tailed, 1-GPU dominated (PAI characterization)
+    assert 0.45 < (gpus == 1).mean() < 0.65
+    assert set(np.unique(gpus)) <= {1, 2, 4, 8, 16}
+    submits = np.array([r.submit_slot for r in records])
+    assert submits.min() >= 0 and submits.max() < 100
+    assert all(r.bandwidth_class in BANDWIDTH_CLASSES for r in records)
+    # records come sorted by submission time
+    assert list(submits) == sorted(submits)
+
+
+def test_synthesize_queued_fraction():
+    records = synthesize_pai_like(n_jobs=2000, horizon=100, seed=0,
+                                  queued_fraction=1.0)
+    assert all(r.submit_slot == 0 for r in records)
+    half = synthesize_pai_like(n_jobs=2000, horizon=100, seed=0,
+                               queued_fraction=0.5)
+    frac0 = np.mean([r.submit_slot == 0 for r in half])
+    assert 0.4 < frac0 < 0.6
+
+
+def test_synthesize_seeded_determinism():
+    assert synthesize_pai_like(n_jobs=200, seed=9) == \
+        synthesize_pai_like(n_jobs=200, seed=9)
+    assert synthesize_pai_like(n_jobs=200, seed=9) != \
+        synthesize_pai_like(n_jobs=200, seed=10)
+
+
+def test_trace_columns_are_the_documented_schema():
+    assert TRACE_COLUMNS == ("job_id", "submit_slot", "gpu_count",
+                             "duration_slots", "bandwidth_class", "priority")
