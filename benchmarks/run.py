@@ -27,9 +27,10 @@ scaled instance so the whole suite runs in minutes on one CPU core. Pass
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -43,6 +44,12 @@ from repro.sched import ContentionConfig, OnlineDriver, registry
 
 ROWS: List[str] = []
 
+# per-section provenance: every figure records the resolved seeds, scheduler
+# names and solver config it actually ran with, so a --json artifact is
+# replayable from the artifact alone (no need to read this file at the
+# matching revision to learn which seed produced a row)
+RUN_META: Dict[str, Dict[str, Any]] = {}
+
 # default comparison set: the paper's four policies plus the beyond-paper
 # elastic baseline variants (all resolved through the registry)
 DEFAULT_SCHEDULERS = ("gadget", "fifo", "drf", "las",
@@ -55,11 +62,29 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(row, flush=True)
 
 
+def record_meta(section: str, **fields: Any) -> None:
+    """Merge provenance fields into the section's RUN_META entry."""
+    RUN_META.setdefault(section, {}).update(fields)
+
+
 def _schedulers(seed: int = 0, names: Optional[Sequence[str]] = None):
     return [
         (name, lambda name=name: registry.create(name, seed=seed))
         for name in (names or DEFAULT_SCHEDULERS)
     ]
+
+
+def _scheduler_meta(seed: int = 0,
+                    names: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+    """Resolved scheduler provenance: names, seed, and — when GADGET is in
+    the set — the full GvneConfig the registry factory builds for it."""
+    resolved = list(names or DEFAULT_SCHEDULERS)
+    meta: Dict[str, Any] = {"schedulers": resolved, "scheduler_seed": seed}
+    gadget = next((n for n in resolved if n.startswith("gadget")), None)
+    if gadget is not None:
+        meta["gvne_config"] = dataclasses.asdict(
+            registry.create(gadget, seed=seed).cfg)
+    return meta
 
 
 def fig4_total_utility(full: bool = False,
@@ -68,6 +93,9 @@ def fig4_total_utility(full: bool = False,
     n_servers = 50 if full else 16
     horizon = 200 if full else 60
     job_counts = [20, 40, 60, 80, 100] if full else [15, 30, 60, 90]
+    record_meta("fig4", n_servers=n_servers, horizon=horizon,
+                job_counts=job_counts, graph_seed=1, trace_seed=2,
+                **_scheduler_meta(names=schedulers))
     for n_jobs in job_counts:
         graph = make_fat_tree(n_servers=n_servers, seed=1)
         jobs = generate_jobs(JobTraceConfig(
@@ -91,6 +119,9 @@ def fig4b_heavy_load(full: bool = False,
     n_servers = 50 if full else 16
     horizon = 100 if full else 50
     job_counts = [60, 120] if full else [40, 80]
+    record_meta("fig4b", n_servers=n_servers, horizon=horizon,
+                job_counts=job_counts, graph_seed=1, trace_seed=5,
+                **_scheduler_meta(names=schedulers))
     for n_jobs in job_counts:
         graph = make_fat_tree(n_servers=n_servers, seed=1)
         jobs = generate_jobs(JobTraceConfig(
@@ -115,6 +146,15 @@ def _capacity_sweep(kind: str, scales, full: bool) -> None:
     horizon = 100 if full else 40
     n_jobs = 60 if full else 30
     trials = 3
+    record_meta("fig5" if kind == "node" else "fig6",
+                n_servers=n_servers, horizon=horizon, n_jobs=n_jobs,
+                scales=list(scales), trials=trials,
+                graph_seeds=[10 + k for k in range(trials)],
+                trace_seeds=[20 + k for k in range(trials)],
+                scheduler_seeds=list(range(trials)),
+                **{k: v for k, v in
+                   _scheduler_meta(names=["gadget"]).items()
+                   if k != "scheduler_seed"})
     for scale in scales:
         ratios = []
         dt_us = 0.0
@@ -160,6 +200,13 @@ def fig6_edge_capacity(full: bool = False) -> None:
 def fig7_approx_ratio(full: bool = False) -> None:
     """Paper Fig. 7: per-slot G-VNE utility / exact optimum (HiGHS B&B)."""
     n_inst = 10 if full else 6
+    record_meta("fig7", n_instances=n_inst, n_servers=5, n_jobs=5,
+                graph_seeds=list(range(n_inst)),
+                trace_seeds=[s + 100 for s in range(n_inst)],
+                gvne_configs=[dataclasses.asdict(
+                    GvneConfig(seed=s, n_candidates=8))
+                    for s in range(n_inst)],
+                exact_max_servers=3)
     ratios = []
     dt_us = 0.0
     for seed in range(n_inst):
@@ -192,7 +239,12 @@ def fig8_contention_sweep(full: bool = False) -> None:
     n_servers = 50 if full else 16
     horizon = 100 if full else 40
     n_jobs = 60 if full else 30
-    for oversub in ([1.0, 1.25, 1.5, 2.0, 3.0] if full else [1.0, 1.5, 2.0]):
+    oversubs = [1.0, 1.25, 1.5, 2.0, 3.0] if full else [1.0, 1.5, 2.0]
+    record_meta("fig8", n_servers=n_servers, horizon=horizon, n_jobs=n_jobs,
+                oversubscription=oversubs, link_scale=0.05,
+                graph_seed=7, trace_seed=8,
+                **_scheduler_meta(names=["gadget"]))
+    for oversub in oversubs:
         graph = make_fat_tree(n_servers=n_servers, seed=7)
         for e in list(graph.links):
             graph.links[e] *= 0.05  # scarce-bandwidth regime (cf. fig6)
@@ -237,6 +289,9 @@ def re_ring_cost(full: bool = False) -> None:
     import textwrap
 
     repeats = 5 if full else 3
+    record_meta("re_ring", repeats=repeats, arch="qwen3-0.6b (reduced)",
+                data_seed=0, devices=8, ring="w8to4", optimizer="sgdm",
+                mode="psum")
     prog = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -332,6 +387,7 @@ def compress_ring_bench(full: bool = False) -> None:
 
     d = (1 << 22) if full else (1 << 18)
     repeats = 20 if full else 8
+    record_meta("compress", d=d, repeats=repeats, devices=8, data_seed=0)
     prog = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -450,6 +506,11 @@ def trace_scale_sweep(
     graph = make_fat_tree(n_servers=n_servers, seed=1)
     total_gpus = int(graph.total_caps()["gpus"])
     window = admission_window or total_gpus
+    record_meta("trace", n_servers=n_servers, horizon=horizon,
+                graph_seed=1, synth_seed=3, jobs_seed=4,
+                trace_path=trace_path, points=list(points),
+                admission_window=window,
+                **_scheduler_meta(names=["gadget"]))
     if trace_path:
         traces = [(None, load_trace(trace_path))]
     else:
@@ -464,6 +525,9 @@ def trace_scale_sweep(
         inst = DDLJSInstance(graph=graph, jobs=jobs, horizon=horizon)
         sched = registry.create("gadget", seed=0)
         sched.cfg.admission_window = window
+        # re-record from the live object: the artifact must show the cfg the
+        # run actually used (admission_window is set after the factory)
+        record_meta("trace", gvne_config=dataclasses.asdict(sched.cfg))
         timed = _TimedScheduler(sched)
         res = OnlineDriver(inst).run(timed)
         lat_ms = np.array(timed.latencies_s) * 1e3
@@ -479,6 +543,8 @@ def trace_scale_sweep(
 def eq1_rar_time_model(full: bool = False) -> None:
     """§III-3 table: tau(w) for a 1.2B-param job on v5e constants."""
     prof = profile_from_arch(n_params=1.2e9, tokens_per_batch=4096 * 8)
+    record_meta("eq1", n_params=1.2e9, tokens_per_batch=4096 * 8,
+                workers=[1, 2, 4, 8, 16, 32])
     for w in (1, 2, 4, 8, 16, 32):
         t0 = time.perf_counter()
         tau = float(prof.iteration_time(w))
@@ -579,9 +645,18 @@ def main() -> None:
                 **{k: _num(v) for k, v in
                    (kv.split("=", 1) for kv in derived.split(";") if "=" in kv)},
             })
+        artifact = {
+            "meta": {
+                "argv": sys.argv[1:],
+                "full": args.full,
+                "sections": RUN_META,
+            },
+            "rows": rows,
+        }
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"# wrote {len(rows)} rows -> {args.json}", file=sys.stderr)
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {len(rows)} rows + {len(RUN_META)} section metas "
+              f"-> {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

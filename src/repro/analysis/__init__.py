@@ -1,0 +1,34 @@
+"""repro.analysis — mechanized correctness checks for the GADGET repro.
+
+The repo's correctness story rests on three load-bearing invariants:
+
+  * **bit-identical replay** of seeded event streams (the PR 3/6 contract:
+    same seed, same ``SimResult``) — one unseeded RNG draw or set-ordered
+    iteration in a decision path silently breaks it;
+  * **conservation of the Eq. (1) worker-time accounting** (``ScheduleState``
+    z-vectors, ``ResourceState`` capacities, the cached ``total_utility``);
+  * **wire-byte agreement** between the scheduler's cost model
+    (``repro.core.rar_model``) and what the fused ring actually sends
+    (``repro.dist.compression`` / ``repro.kernels.quant_ring``).
+
+Golden tests pin instances of these; this package mechanizes the *classes*:
+
+  * :mod:`repro.analysis.lint` — AST lint over ``src/repro`` with
+    repo-specific determinism/accounting rules and a checked-in baseline
+    (``python -m repro.analysis.lint``).
+  * :mod:`repro.analysis.sanitize` — the opt-in runtime sanitizer
+    (``OnlineDriver(sanitize=True)`` / ``REPRO_SANITIZE=1``): per-slot
+    domain-invariant assertions, the domain analogue of ASan/TSan wiring.
+  * :mod:`repro.analysis.kernels` — static Pallas-kernel checker
+    (tile divisibility, VMEM budgets, scale-trailer consistency) runnable
+    without a TPU (``python -m repro.analysis.kernels``).
+
+All three run in CI (the ``lint-and-sanitize`` job). See this directory's
+README.md for every rule, its rationale, and how to suppress.
+"""
+
+from repro.analysis.sanitize import (  # noqa: F401
+    SanitizerError,
+    SlotSanitizer,
+    sanitize_enabled,
+)

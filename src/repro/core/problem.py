@@ -78,6 +78,11 @@ class ScheduleState:
     accounting and leaves the cached utilities stale.
     """
 
+    # test hook (tests/test_analysis.py): True makes commit_slot skip the
+    # utility-cache refresh, simulating exactly the silent accounting drift
+    # repro.analysis.sanitize exists to catch. Never set outside tests.
+    _test_skip_utility_refresh = False
+
     def __init__(self, inst: DDLJSInstance):
         self.inst = inst
         self.z: Dict[int, float] = {j.id: 0.0 for j in inst.jobs}
@@ -139,10 +144,12 @@ class ScheduleState:
             self.history[e.job_id].append(e)
         # refresh the utility cache for the touched jobs only — total_utility
         # then sums cached values instead of re-evaluating every job's
-        # utility function each slot
-        for jid in {e.job_id for e in embeddings}:
-            job = self.inst.job(jid)
-            self._util[jid] = job.utility(job.zeta * self.z[jid])
+        # utility function each slot (sorted so the refresh order, and hence
+        # any float-dependent downstream consumer, is replayable)
+        if not self._test_skip_utility_refresh:
+            for jid in sorted({e.job_id for e in embeddings}):
+                job = self.inst.job(jid)
+                self._util[jid] = job.utility(job.zeta * self.z[jid])
 
     def job_utility(self, job: Job) -> float:
         self._ensure(job)

@@ -45,7 +45,7 @@ if TYPE_CHECKING:  # annotation-only: keeps this module import-cycle-free
     from repro.core.problem import DDLJSInstance, Job, ScheduleState
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class ContentionConfig:
     """Shared-bandwidth contention model (see repro.cluster.topology).
 
@@ -61,7 +61,7 @@ class ContentionConfig:
     enabled: bool = True
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SlotDecision:
     """One slot's allocation (Algorithm 1 line 4): the committed ring
     embeddings plus solver diagnostics."""
@@ -97,7 +97,7 @@ def contention_factor(res: ResourceState, emb: Embedding, job) -> float:
     return ratio
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SchedulerContext:
     """Everything a scheduler may consult at slot ``t``.
 
@@ -229,7 +229,7 @@ def as_scheduler(obj) -> Scheduler:
     return LegacySchedulerAdapter(obj)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SlotRecord:
     """Per-slot accounting row (feeds metrics.summarize)."""
 
@@ -246,7 +246,7 @@ class SlotRecord:
     lost_embeddings: int = 0           # rings voided by mid-slot failures
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SimResult:
     """Outcome of one driver run: per-slot records, final state, event log."""
 

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.analysis.sanitize import SlotSanitizer, sanitize_enabled
 from repro.cluster.topology import Embedding, ResourceState
 from repro.core.problem import DDLJSInstance, ScheduleState
 from repro.sched.api import (
@@ -70,6 +71,7 @@ from repro.sched.events import (
     SlotTick,
     StragglerEnd,
     StragglerOnset,
+    WorkerJoin,
     WorkerLeave,
 )
 
@@ -89,6 +91,13 @@ class OnlineDriver:
     analytic backend: a live run measures wall time and (with its default
     ``calibrate=True``) refits the instance's job profiles in place — see
     :class:`~repro.sched.backend.LiveBackend` for the replay caveats.
+
+    ``sanitize`` attaches the :class:`~repro.analysis.sanitize.SlotSanitizer`
+    — per-slot re-derivation of the capacity/budget/utility invariants, the
+    domain analogue of running under ASan. ``None`` (default) defers to the
+    ``REPRO_SANITIZE`` environment variable. The sanitizer only reads state,
+    so a sanitized run is bit-identical to the default path (pinned in
+    tests/test_analysis.py).
     """
 
     def __init__(
@@ -99,6 +108,7 @@ class OnlineDriver:
         contention: Optional[ContentionConfig] = None,
         events: Optional[EventStream] = None,
         backend: Optional[ExecutionBackend] = None,
+        sanitize: Optional[bool] = None,
     ):
         if faults is not None and events is not None:
             raise ValueError(
@@ -114,6 +124,7 @@ class OnlineDriver:
             [s.id for s in inst.graph.servers], self.faults
         )
         self.backend = backend if backend is not None else AnalyticBackend()
+        self.sanitize = sanitize_enabled(sanitize)
 
     def run(self, scheduler: Union[Scheduler, str, None] = None) -> SimResult:
         if scheduler is None:
@@ -127,6 +138,7 @@ class OnlineDriver:
         inst = self.inst
         stream = self.events
         stream.reset()
+        sanitizer = SlotSanitizer() if self.sanitize else None
         state = ScheduleState(inst)
         failed: set = set()
         straggling: Dict[int, float] = {}
@@ -166,7 +178,7 @@ class OnlineDriver:
                 inst.graph, oversubscription=self.contention.oversubscription
             )
             down_now = frozenset(failed)
-            for sid in down_now:  # zero out capacity of failed servers
+            for sid in sorted(down_now):  # zero capacity of failed servers
                 for r in res.free_node[sid]:
                     res.free_node[sid][r] = 0.0
 
@@ -205,6 +217,11 @@ class OnlineDriver:
                     straggling.pop(ev.server_id, None)
                 elif isinstance(ev, WorkerLeave):
                     left[ev.job_id] = left.get(ev.job_id, 0) + ev.n
+                elif isinstance(ev, WorkerJoin):
+                    # explicitly ignored mid-slot: joins reshape rings at
+                    # the next slot boundary (events.py contract) — the
+                    # decision for this slot has already been placed
+                    pass
                 log.append(ev)
                 sched.on_event(ev, ctx)
 
@@ -231,6 +248,10 @@ class OnlineDriver:
                 log.append(EmbeddingCommitted(t, e.job_id, e.n_workers))
             # z + history accounting via the single shared path
             state.commit_slot(committed, outcome.factors)
+
+            if sanitizer is not None:  # read-only invariant re-derivation
+                sanitizer.check_slot(ctx=ctx, committed=committed,
+                                     outcome=outcome)
 
             # completion check over the candidate set only: the initial sweep
             # (t=0) covers jobs whose budget starts exhausted; afterwards only
