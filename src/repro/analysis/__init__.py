@@ -22,8 +22,16 @@ Golden tests pin instances of these; this package mechanizes the *classes*:
   * :mod:`repro.analysis.kernels` — static Pallas-kernel checker
     (tile divisibility, VMEM budgets, scale-trailer consistency) runnable
     without a TPU (``python -m repro.analysis.kernels``).
+  * :mod:`repro.analysis.collectives` — jaxpr-level verifier that traces
+    every registered ring variant and train-step mode under ``AbstractMesh``
+    and statically checks ring topology, deadlock-safe collective ordering,
+    pricing agreement with ``rar_model``, and recompilation hazards in the
+    ``RingWorkerGroup`` compiled-step cache
+    (``python -m repro.analysis.collectives``); its seeded mutation suite
+    lives in :mod:`repro.analysis.fixtures`, and the shared suppression
+    ledger in :mod:`repro.analysis.baseline`.
 
-All three run in CI (the ``lint-and-sanitize`` job). See this directory's
+All four run in CI (the ``lint-and-sanitize`` job). See this directory's
 README.md for every rule, its rationale, and how to suppress.
 """
 

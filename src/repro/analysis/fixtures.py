@@ -1,0 +1,192 @@
+"""Deliberately broken collectives — the verifier's mutation suite.
+
+Each fixture here is a ring collective with exactly one seeded defect, one
+per check axis of :mod:`repro.analysis.collectives`:
+
+  * ``broken-wrong-permutation`` — hops permute ``i -> i+2``: a bijection,
+    but for even world sizes the "ring" splits into two disjoint cycles, so
+    half the partial sums never visit half the workers (**ring-topology**);
+  * ``broken-mixed-direction``  — alternate hops reverse direction in a
+    variant declared unidirectional: each perm is a valid cycle, but a
+    chunk bounces between two workers instead of walking the ring
+    (**ring-topology**, direction consistency — needs w >= 3 to be
+    distinguishable: at w=2 forward and reverse coincide);
+  * ``broken-branch-nested``    — a ppermute nested under ``lax.cond`` on a
+    data-dependent predicate: replicas whose predicate disagrees issue
+    mismatched collective sequences and the ring hangs (**deadlock-order**);
+  * ``broken-f32-payload-int8`` — a ring priced as the XLA int8 layout that
+    ships f32 payloads: message count matches, bytes drift 4x vs
+    ``rar_model`` (**pricing**);
+  * ``broken-trailer-mismatch`` — a fused-layout ring whose scale trailer
+    carries :data:`TRAILER_MISMATCH_SCALE_BYTES` bytes per sub-block
+    instead of the f32 itemsize the bitcast needs (**pricing**; the same
+    defect class the kernel checker's must-reject suite covers via
+    :func:`trailer_mismatch_kernel_spec` — one shared constant, two
+    checkers);
+  * :func:`weak_typed_template` — a parameter template with a weak-typed
+    scalar leaf: a Python-float-shaped entry in the jitted step's signature
+    re-keys the compilation cache on every strongly-typed caller
+    (**recompile-hazard**).
+
+The CLI's ``--self-test`` (run by default, like the kernel checker's
+must-reject suite) traces every broken variant and fails CI if its check
+axis stops firing — the acceptance test that each analysis actually has
+teeth.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.registry import RingVariant
+from repro.kernels.quant_ring import hop_message_layout
+
+__all__ = ["TRAILER_MISMATCH_SCALE_BYTES", "broken_ring_variants",
+           "weak_typed_template", "trailer_mismatch_kernel_spec"]
+
+_SOURCE = "src/repro/analysis/fixtures.py"
+
+# a trailer layout the wire accounting must reject: 2 bytes per sub-block
+# scale, vs the 4-byte f32 itemsize the bitcast trailer actually needs.
+# Shared between the collective verifier's broken-trailer ring and the
+# kernel checker's must-reject KernelSpec so both analyses demonstrably
+# catch the same defect class.
+TRAILER_MISMATCH_SCALE_BYTES = 2
+
+
+def _pad_chunk(x: jax.Array, w: int) -> jax.Array:
+    """The executed ring chunk: flatten and zero-pad to ceil(size/w)."""
+    c = -(-x.size // w)
+    flat = x.reshape(-1).astype(jnp.float32)
+    return jnp.pad(flat, (0, c * w - flat.size))[:c]
+
+
+def _keep_live(x: jax.Array, *dependents: jax.Array) -> jax.Array:
+    """Tie collective outputs into the result so tracing keeps them."""
+    extra = sum(jnp.sum(d.astype(jnp.float32)) for d in dependents)
+    return x + (0.0 * extra).astype(x.dtype)
+
+
+def _wrong_permutation(axis_name: str) -> Callable:
+    def run(x: jax.Array) -> jax.Array:
+        w = lax.axis_size(axis_name)
+        if w == 1:
+            return x
+        chunk = _pad_chunk(x, w)
+        perm = [(i, (i + 2) % w) for i in range(w)]  # skips every other rank
+        for _ in range(2 * (w - 1)):
+            chunk = lax.ppermute(chunk, axis_name, perm)
+        return _keep_live(x, chunk)
+    return run
+
+
+def _mixed_direction(axis_name: str) -> Callable:
+    def run(x: jax.Array) -> jax.Array:
+        w = lax.axis_size(axis_name)
+        if w == 1:
+            return x
+        chunk = _pad_chunk(x, w)
+        fwd = [(i, (i + 1) % w) for i in range(w)]
+        rev = [(i, (i - 1) % w) for i in range(w)]
+        for s in range(2 * (w - 1)):
+            chunk = lax.ppermute(chunk, axis_name, fwd if s % 2 == 0 else rev)
+        return _keep_live(x, chunk)
+    return run
+
+
+def _branch_nested(axis_name: str) -> Callable:
+    def run(x: jax.Array) -> jax.Array:
+        w = lax.axis_size(axis_name)
+        if w == 1:
+            return x
+        chunk = _pad_chunk(x, w)
+        perm = [(i, (i + 1) % w) for i in range(w)]
+
+        def send(c):
+            return lax.ppermute(c, axis_name, perm)
+
+        # data-dependent predicate: replicas may disagree at run time, so
+        # some issue the ppermute and some do not -> mismatched collectives
+        out = lax.cond(jnp.sum(chunk) > 0, send, lambda c: c, chunk)
+        for _ in range(2 * (w - 1) - 1):
+            out = lax.ppermute(out, axis_name, perm)
+        return _keep_live(x, out)
+    return run
+
+
+def _f32_payload_int8(axis_name: str) -> Callable:
+    def run(x: jax.Array) -> jax.Array:
+        w = lax.axis_size(axis_name)
+        if w == 1:
+            return x
+        chunk = _pad_chunk(x, w)          # f32 — 4x the priced int8 payload
+        scale = jnp.float32(1.0) * chunk[0]
+        perm = [(i, (i + 1) % w) for i in range(w)]
+        for _ in range(2 * (w - 1)):      # right message count (2 per hop)
+            chunk = lax.ppermute(chunk, axis_name, perm)
+            scale = lax.ppermute(scale, axis_name, perm)
+        return _keep_live(x, chunk, scale)
+    return run
+
+
+def _trailer_mismatch(axis_name: str) -> Callable:
+    from repro.dist.compression import DEFAULT_BLOCK
+
+    def run(x: jax.Array) -> jax.Array:
+        w = lax.axis_size(axis_name)
+        if w == 1:
+            return x
+        c = -(-x.size // w)
+        layout = hop_message_layout(c, block=DEFAULT_BLOCK)
+        payload = jnp.zeros((layout.payload_bytes,), jnp.int8)
+        payload = payload + x.reshape(-1)[0].astype(jnp.int8)
+        trailer = jnp.zeros(
+            (layout.n_blocks * TRAILER_MISMATCH_SCALE_BYTES,), jnp.int8)
+        msg = jnp.concatenate([payload, trailer])  # trailer 2 B short/block
+        perm = [(i, (i + 1) % w) for i in range(w)]
+        for _ in range(2 * (w - 1)):
+            msg = lax.ppermute(msg, axis_name, perm)
+        return _keep_live(x, msg)
+    return run
+
+
+def broken_ring_variants() -> List[Tuple[RingVariant, str]]:
+    """(variant, check axis that must fire) — the seeded mutation suite."""
+    return [
+        (RingVariant(name="broken-wrong-permutation",
+                     build=_wrong_permutation, source=_SOURCE),
+         "ring-topology"),
+        (RingVariant(name="broken-mixed-direction",
+                     build=_mixed_direction, source=_SOURCE),
+         "ring-topology"),
+        (RingVariant(name="broken-branch-nested",
+                     build=_branch_nested, source=_SOURCE),
+         "deadlock-order"),
+        (RingVariant(name="broken-f32-payload-int8",
+                     build=_f32_payload_int8, compression="int8",
+                     source=_SOURCE),
+         "pricing"),
+        (RingVariant(name="broken-trailer-mismatch",
+                     build=_trailer_mismatch, compression="int8-fused",
+                     source=_SOURCE),
+         "pricing"),
+    ]
+
+
+def weak_typed_template() -> dict:
+    """A params template whose scalar leaf is weak-typed (cache hazard)."""
+    return {
+        "w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        "lr_scale": jax.core.ShapedArray((), jnp.float32, weak_type=True),
+    }
+
+
+def trailer_mismatch_kernel_spec():
+    """The kernel checker's must-reject spec for the shared trailer defect."""
+    from repro.analysis.kernels import KernelSpec
+
+    return KernelSpec(64, 4096, scale_bytes=TRAILER_MISMATCH_SCALE_BYTES)

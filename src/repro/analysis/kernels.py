@@ -64,18 +64,29 @@ BYTES_PER_ELEM = {
 
 @dataclasses.dataclass(frozen=True)
 class KernelSpec:
-    """One (shape, block) configuration of a quant_ring kernel."""
+    """One (shape, block) configuration of a quant_ring kernel.
+
+    ``scale_bytes`` overrides the trailer bytes-per-scale the spec claims to
+    put on the wire (default: the kernels' ``SCALE_BYTES``). Any value other
+    than the f32 itemsize the bitcast trailer emits must be rejected by the
+    trailer-consistency check — the must-reject suite pins this with the
+    same :data:`repro.analysis.fixtures.TRAILER_MISMATCH_SCALE_BYTES` layout
+    the collective verifier's broken-trailer ring uses.
+    """
 
     n_blocks: int
     block: int
     kernel: str = "quantize_pack"
     rows_per_tile: Optional[int] = None
+    scale_bytes: Optional[int] = None
 
     def __str__(self) -> str:
         rows = "" if self.rows_per_tile is None else \
             f", rows={self.rows_per_tile}"
+        sb = "" if self.scale_bytes is None else \
+            f", scale_bytes={self.scale_bytes}"
         return f"{self.kernel}(n_blocks={self.n_blocks}, " \
-               f"block={self.block}{rows})"
+               f"block={self.block}{rows}{sb})"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,14 +164,17 @@ def _check_trailer_consistency(spec: KernelSpec) -> List[str]:
     from repro.dist.compression import SCALE_BYTES, compressed_wire_bytes
 
     errors: List[str] = []
-    if SCALE_BYTES != np.dtype(np.float32).itemsize:
+    f32_bytes = np.dtype(np.float32).itemsize
+    scale_bytes = SCALE_BYTES if spec.scale_bytes is None else \
+        int(spec.scale_bytes)
+    if scale_bytes != f32_bytes:
         errors.append(
-            f"SCALE_BYTES={SCALE_BYTES} != f32 itemsize "
-            f"{np.dtype(np.float32).itemsize} — the bitcast trailer the "
-            "kernels emit no longer matches the wire accounting")
+            f"trailer scale_bytes={scale_bytes} != f32 itemsize "
+            f"{f32_bytes} — the bitcast trailer the kernels emit does not "
+            "match this wire layout")
 
     nb, block = spec.n_blocks, spec.block
-    message = nb * block + SCALE_BYTES * nb  # payload ++ trailer
+    message = nb * block + scale_bytes * nb  # payload ++ trailer
     for w in (2, 4):
         d = w * nb * block  # shards into w chunks of exactly (nb, block)
         expect = 2 * (w - 1) * message
@@ -220,11 +234,16 @@ def execute_spec(spec: KernelSpec) -> Optional[str]:
 def default_suite() -> List[Tuple[KernelSpec, bool]]:
     """(spec, expected-to-pass) pairs exercised by the CLI and CI.
 
-    Covers each kernel's byte budget, an explicit rows override, and two
-    configurations the checker must *reject*: a non-dividing override and a
+    Covers each kernel's byte budget, an explicit rows override, and three
+    configurations the checker must *reject*: a non-dividing override, a
     block so large that one sub-block row overflows the tile budget (the
-    gap ``_rows_per_tile`` itself does not police).
+    gap ``_rows_per_tile`` itself does not police), and the shared
+    trailer-layout mismatch fixture (a 2-byte-per-scale trailer the
+    collective verifier's broken-trailer ring also seeds — one defect,
+    caught by both analyses).
     """
+    from repro.analysis.fixtures import trailer_mismatch_kernel_spec
+
     return [
         (KernelSpec(64, 4096), True),
         (KernelSpec(512, 256, kernel="dequant_add_quantize",
@@ -232,6 +251,7 @@ def default_suite() -> List[Tuple[KernelSpec, bool]]:
         (KernelSpec(7, 4096, kernel="dequant_accumulate"), True),
         (KernelSpec(48, 512, rows_per_tile=5), False),   # 5 does not divide 48
         (KernelSpec(4, 1 << 20), False),                 # one row > 2 MB tile
+        (trailer_mismatch_kernel_spec(), False),         # 2 B scale trailer
     ]
 
 

@@ -3,8 +3,9 @@
 Run as ``python -m repro.analysis.lint``. Exits 0 when every violation is
 covered by the checked-in baseline (``lint_baseline.txt`` next to this
 module); exits 1 on new violations, on stale baseline entries (debt that was
-paid off must leave the ledger), and on baseline lines missing a
-justification.
+paid off must leave the ledger), and on baseline lines whose justification
+is missing or still the ``TODO`` placeholder ``--write-baseline`` emits
+(shared plumbing: :mod:`repro.analysis.baseline`).
 
 Rules (full rationale in this directory's README.md):
 
@@ -49,9 +50,16 @@ from __future__ import annotations
 import argparse
 import ast
 import dataclasses
+import json
 import os
 import sys
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.baseline import (  # noqa: F401  (re-exported API)
+    Baseline,
+    apply_baseline,
+    write_baseline,
+)
 
 # decision-path prefixes (relative to the repro package root): modules whose
 # code runs inside the per-slot decision loop and is therefore held to the
@@ -432,39 +440,25 @@ def run_lint(root: Optional[str] = None) -> List[Violation]:
     return sorted(violations, key=lambda v: (v.path, v.line, v.rule))
 
 
-@dataclasses.dataclass
-class Baseline:
-    entries: Dict[str, str]          # key -> justification
-    malformed: List[str]             # lines missing a justification
-
-    @classmethod
-    def load(cls, path: str) -> "Baseline":
-        entries: Dict[str, str] = {}
-        malformed: List[str] = []
-        if not os.path.exists(path):
-            return cls(entries, malformed)
-        with open(path) as f:
-            for raw in f:
-                line = raw.strip()
-                if not line or line.startswith("#"):
-                    continue
-                key, sep, why = line.partition("  # ")
-                key = key.strip()
-                if not sep or not why.strip():
-                    malformed.append(line)
-                    continue
-                entries[key] = why.strip()
-        return cls(entries, malformed)
-
-
-def apply_baseline(
-    violations: Sequence[Violation], baseline: Baseline
-) -> Tuple[List[Violation], List[str]]:
-    """(new violations, stale baseline keys)."""
-    seen_keys = {v.key for v in violations}
-    new = [v for v in violations if v.key not in baseline.entries]
-    stale = sorted(k for k in baseline.entries if k not in seen_keys)
-    return new, stale
+def violations_json(violations: Sequence[Violation],
+                    baseline: Baseline) -> Dict:
+    """Machine-readable findings (the --json artifact schema, shared with
+    repro.analysis.collectives): every violation with rule/path/line/symbol/
+    message plus its baseline status, and the stale/malformed ledger state
+    that also fails the gate."""
+    new, stale = apply_baseline(violations, baseline)
+    new_keys = {v.key for v in new}
+    return {
+        "tool": "repro.analysis.lint",
+        "findings": [
+            {"rule": v.rule, "path": v.path, "line": v.line,
+             "symbol": v.symbol, "message": v.message, "key": v.key,
+             "baselined": v.key not in new_keys}
+            for v in violations
+        ],
+        "stale": stale,
+        "malformed": list(baseline.malformed),
+    }
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -481,31 +475,35 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                         help="report every violation, ignoring the baseline")
     parser.add_argument("--write-baseline", action="store_true",
                         help="write the current violation set as the "
-                             "baseline (justifications to be filled in)")
+                             "baseline; written placeholder entries still "
+                             "fail the lint until each is justified")
+    parser.add_argument("--json", default=None, metavar="PATH",
+                        help="also write machine-readable findings "
+                             "(rule/path/line/symbol/message) to PATH")
     args = parser.parse_args(argv)
     baseline_path = args.baseline or default_baseline_path()
     violations = run_lint(args.root)
 
     if args.write_baseline:
-        with open(baseline_path, "w") as f:
-            f.write("# repro.analysis.lint baseline — pre-existing debt.\n"
-                    "# One suppression per line: rule:path:symbol"
-                    "  # justification\n")
-            for key in sorted({v.key for v in violations}):
-                f.write(f"{key}  # TODO justify\n")
-        print(f"wrote {len({v.key for v in violations})} baseline entries "
-              f"-> {baseline_path}")
+        n = write_baseline(baseline_path, (v.key for v in violations),
+                           tool="repro.analysis.lint")
+        print(f"wrote {n} baseline entries -> {baseline_path}")
+        print("placeholder justifications still FAIL the lint — replace "
+              "each 'TODO justify' with a real rationale")
         return 0
 
     baseline = Baseline(entries={}, malformed=[]) if args.no_baseline \
         else Baseline.load(baseline_path)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(violations_json(violations, baseline), f, indent=2)
     new, stale = apply_baseline(violations, baseline)
     status = 0
     for v in new:
         print(v)
         status = 1
     for line in baseline.malformed:
-        print(f"baseline entry missing '  # justification': {line}")
+        print(f"baseline entry missing or placeholder justification: {line}")
         status = 1
     for key in stale:
         print(f"stale baseline entry (violation no longer fires — delete "

@@ -158,6 +158,64 @@ def rar_ring_messages(w: Array, *, compression: Optional[str] = None) -> Array:
     return compressed_ring_messages(w, fused=compression != "int8")
 
 
+WIRE_COMPRESSIONS = (None, "int8", "int8-fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormula:
+    """The Eq. (1) wire accounting of one ring layout, looked up by config.
+
+    ``messages(w)`` is the ppermute count one full all-reduce issues per
+    worker (what a per-message gamma multiplies); ``bytes_per_worker(d, w)``
+    the total wire bytes it sends. ``executed=True`` (the default) prices
+    the chunks the ring actually puts on the wire — for the f32 ring that
+    means the zero-padded ``ceil(d/w)`` chunk, so the result matches a
+    traced jaxpr *exactly*; ``executed=False`` is the paper's continuous
+    ``2 d (w-1)/w`` form used inside Eq. (1). The compressed layouts price
+    padding in both cases (their formulas are defined on the executed
+    layout). This is the lookup the static collective verifier
+    (``repro.analysis.collectives``) compares traced jaxprs against.
+    """
+
+    compression: Optional[str]  # None | "int8" | "int8-fused"
+    elem_bytes: int = 4
+    block: int = 4096
+    scale_bytes: int = 4
+
+    def messages(self, w: int) -> int:
+        if w <= 1:
+            return 0
+        return int(rar_ring_messages(w, compression=self.compression))
+
+    def bytes_per_worker(self, d: int, w: int, *,
+                         executed: bool = True) -> float:
+        if w <= 1:
+            return 0.0
+        if self.compression is None:
+            d_wire = (-(-int(d) // w)) * w if executed else d
+            return float(rar_ring_bytes_per_worker(
+                d_wire, w, elem_bytes=self.elem_bytes))
+        return float(rar_compressed_bytes_per_worker(
+            d, w, fused=self.compression == "int8-fused",
+            block=self.block, scale_bytes=self.scale_bytes))
+
+
+def wire_formula(compression: Optional[str], *, elem_bytes: int = 4,
+                 block: int = 4096, scale_bytes: int = 4) -> WireFormula:
+    """Wire-cost formulas for a profile's ``compression`` config.
+
+    Raises on unknown layouts so a new wire format cannot silently fall
+    back to f32 pricing — it must be added here *and* to the verifier's
+    registry before the scheduler will price it.
+    """
+    if compression not in WIRE_COMPRESSIONS:
+        raise ValueError(
+            f"unknown compression {compression!r}; known wire layouts: "
+            f"{WIRE_COMPRESSIONS}")
+    return WireFormula(compression=compression, elem_bytes=elem_bytes,
+                       block=block, scale_bytes=scale_bytes)
+
+
 def compressed_rar_allreduce_time(
     w: Array, d: float, bandwidth: float, reduce_speed: float, *,
     elem_bytes: int = 4, fused: bool = False, block: int = 4096,

@@ -7,9 +7,20 @@
                     Pallas pipeline (``fused=True``).
 ``overlap``       — gradient accumulation (microbatching) and bucketing.
 ``sharding``      — logical-axis -> mesh-axis rules for the GSPMD/pjit path.
+``registry``      — the enumerable list of ring variants / train-step modes
+                    with their priced wire layouts (what the static
+                    collective verifier sweeps).
 """
 
 from repro.dist import collectives, compression, overlap, sharding  # noqa: F401
+from repro.dist import registry  # noqa: F401
+from repro.dist.registry import (  # noqa: F401
+    RING_VARIANTS,
+    STEP_MODES,
+    RingVariant,
+    StepModeSpec,
+    variant_by_name,
+)
 from repro.dist.collectives import (  # noqa: F401
     bidirectional_ring_all_reduce,
     psum_all_reduce,

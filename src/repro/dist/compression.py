@@ -62,8 +62,10 @@ from jax import lax
 
 from repro.dist.collectives import _all_gather_chunks, _as_chunks, _ring_perm
 from repro.kernels.quant_ring import (
+    SCALE_BYTES,  # noqa: F401  (re-export: the wire accounting's name for it)
     dequant_accumulate_pallas,
     dequant_add_quantize_pallas,
+    hop_message_layout,
     quantize_pack_pallas,
 )
 
@@ -74,8 +76,6 @@ QMAX = 127.0  # symmetric int8 range
 # halved message count), while a 4096-element block's amax scale is still
 # vastly tighter than the XLA path's whole-chunk amax; full lanes on TPU
 DEFAULT_BLOCK = 4096
-
-SCALE_BYTES = 4  # one f32 scale per message (XLA path) or per block (fused)
 
 
 def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -134,12 +134,14 @@ def _fused_chunk_layout(n: int, w: int, block: int) -> Tuple[int, int, int]:
     """(chunk elements, sub-blocks per chunk, total pad) for a flat size n.
 
     Chunks are padded so each splits into whole ``block``-sized sub-blocks;
-    the effective block never exceeds the chunk itself.
+    the effective block never exceeds the chunk itself. Derived from the
+    kernels' :func:`repro.kernels.quant_ring.hop_message_layout` so the ring
+    and the kernel layout cannot disagree on the wire format.
     """
     c = -(-n // max(w, 1))                 # ceil(n / w)
-    b = max(1, min(int(block), c))
-    c_pad = -(-c // b) * b
-    return c_pad, c_pad // b, w * c_pad - n
+    layout = hop_message_layout(c, block=block)
+    c_pad = layout.n_blocks * layout.block
+    return c_pad, layout.n_blocks, w * c_pad - n
 
 
 # ---------------------------------------------------------------------------

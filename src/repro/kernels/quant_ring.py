@@ -40,6 +40,7 @@ padding and the wire format (payload ++ scale trailer).
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -47,6 +48,55 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 QMAX = 127.0  # symmetric int8 range
+
+# bytes each f32 scale occupies after the bitcast into the message trailer;
+# the kernels own this constant (the trailer is *their* output layout) and
+# repro.dist.compression re-exports it for the wire accounting
+SCALE_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class HopMessageLayout:
+    """The fused ring's wire-message layout for one hop chunk.
+
+    A hop message is ``[int8 payload: n_blocks * block][trailer: n_blocks
+    scales, each bitcast to scale_bytes int8 bytes]`` — the layout
+    ``pack_hop_message`` emits and ``unpack_hop_message`` inverts. This is
+    the single source of truth the wire accounting
+    (``compressed_wire_bytes`` / ``rar_compressed_bytes_per_worker``) and
+    the static verifier (``repro.analysis.collectives``) both derive message
+    sizes from, so kernel layout and scheduler pricing cannot drift apart
+    silently.
+    """
+
+    n_blocks: int
+    block: int
+    scale_bytes: int = SCALE_BYTES
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.n_blocks * self.block
+
+    @property
+    def trailer_bytes(self) -> int:
+        return self.n_blocks * self.scale_bytes
+
+    @property
+    def message_bytes(self) -> int:
+        return self.payload_bytes + self.trailer_bytes
+
+
+def hop_message_layout(chunk_elems: int, *, block: int) -> HopMessageLayout:
+    """Layout of one hop message for a ``chunk_elems``-element ring chunk.
+
+    The chunk is padded up to whole ``block``-sized sub-blocks; the
+    effective block never exceeds the chunk itself (tiny chunks quantize as
+    one sub-block).
+    """
+    c = max(int(chunk_elems), 1)
+    b = max(1, min(int(block), c))
+    c_pad = -(-c // b) * b
+    return HopMessageLayout(n_blocks=c_pad // b, block=b)
 
 # per-tile working set cap: f32 in + int8 out (+ f32 acc on the receive
 # side) double-buffered must fit VMEM with headroom

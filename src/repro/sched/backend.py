@@ -104,6 +104,52 @@ class ExecutionBackend(Protocol):
         ...
 
 
+def audit_compiled_step_cache(group) -> List[str]:
+    """Runtime half of the recompile-hazard analysis (axis iv of
+    ``repro.analysis.collectives``): verify a live ``RingWorkerGroup``'s
+    compiled-step cache is keyed soundly. Returns problem strings (empty =
+    clean); read-only.
+
+    Invariants:
+
+      * ``compile_count`` equals the number of cached programs — every miss
+        compiled exactly one executable, so back-to-back same-sized slots
+        cannot be silently re-tracing;
+      * each cached program's mesh spans exactly ``key.workers`` devices —
+        a mesh/key mismatch would run a w-keyed step on the wrong ring;
+      * the closed-over static attrs (``STATIC_CLOSURE_ATTRS``) still match
+        the construction-time fingerprint — a post-init mutation means the
+        ``(workers, mode)`` key no longer identifies the executable's
+        semantics and cached steps are stale.
+    """
+    problems: List[str] = []
+    n_programs = len(group._programs)
+    if group.compile_count != n_programs:
+        problems.append(
+            f"compile_count={group.compile_count} != {n_programs} cached "
+            "program(s) — the (workers, mode) cache is re-tracing (or "
+            "miscounting) compiled steps")
+    for key, prog in group._programs.items():
+        w = key[0]
+        mesh_size = int(prog.mesh.devices.size)
+        if mesh_size != w:
+            problems.append(
+                f"program cached under workers={w} spans {mesh_size} "
+                "device(s) — cache key and mesh disagree")
+        if key != group.cache_key(w):
+            problems.append(
+                f"cached key {key!r} != cache_key({w})={group.cache_key(w)!r}"
+                " — the group's mode changed after this program compiled")
+    fp = group.closure_fingerprint()
+    if fp != group._closure_fingerprint:
+        problems.append(
+            "closed-over static attrs "
+            f"{group.STATIC_CLOSURE_ATTRS} changed after construction "
+            f"(fingerprint {group._closure_fingerprint!r} -> {fp!r}) — "
+            "cached compiled steps are stale under the (workers, mode) key")
+    return problems
+
+
 def _slot_conditions(
     emb: Embedding, execution: SlotExecution
 ) -> Tuple[bool, float, float]:
@@ -214,11 +260,18 @@ class LiveBackend:
 
     def __init__(self, trainers: Mapping[int, "ElasticTrainer"], *,
                  steps_per_slot: int = 4, leave_fraction: float = 0.5,
-                 calibrate: bool = True):
+                 calibrate: bool = True, audit_cache: Optional[bool] = None):
+        from repro.analysis.sanitize import sanitize_enabled
+
         self.trainers = dict(trainers)
         self.steps_per_slot = int(steps_per_slot)
         self.leave_fraction = float(leave_fraction)
         self.calibrate = calibrate
+        # sanitizer hook: after each executed ring, audit the trainer's
+        # compiled-step cache (audit_compiled_step_cache). Defaults to the
+        # REPRO_SANITIZE switch, like the driver's slot sanitizer; read-only
+        # so an audited run stays bit-identical.
+        self.audit_cache = sanitize_enabled(audit_cache)
         self.samples: Dict[int, List[RingTimingSample]] = {}
         self.calibrated: Dict[int, float] = {}
         self.initial_profiles: Dict[int, object] = {}  # pre-refit snapshots
@@ -371,6 +424,16 @@ class LiveBackend:
                          n_leave)
             out = trainer.run_slot(
                 SlotPlan(workers=emb.n_workers, steps=steps, leave=leave))
+            if self.audit_cache:
+                group = getattr(trainer, "group", None)
+                if group is not None:
+                    problems = audit_compiled_step_cache(group)
+                    if problems:
+                        from repro.analysis.sanitize import SanitizerError
+
+                        raise SanitizerError(
+                            f"compiled-step cache audit failed for job "
+                            f"{emb.job_id}: " + "; ".join(problems))
             nominal = self.steps_per_slot * max(emb.n_workers, 1)
             factor = min(1.0, out.get("worker_steps", 0) / nominal)
             factors.append(factor)

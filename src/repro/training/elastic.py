@@ -101,6 +101,16 @@ class RingWorkerGroup:
     Pallas single-ppermute hop pipeline of :mod:`repro.dist.compression`).
     """
 
+    # attributes make_ring_train_step closes over at _program build time:
+    # they are part of the compiled step's semantics but NOT part of the
+    # (workers, mode) cache key, so they must never change after __init__ —
+    # a mutation would silently serve stale compiled steps (or, if jit
+    # retraced on it, turn the cache into per-slot recompiles). The static
+    # verifier (repro.analysis.collectives) checks by AST that no method
+    # other than __init__ assigns them, and audit_compiled_step_cache
+    # cross-checks the live fingerprint per slot.
+    STATIC_CLOSURE_ATTRS = ("model", "optimizer", "global_batch", "lr")
+
     def __init__(self, model, optimizer: Optimizer, *, global_batch: int,
                  lr: float, mode: str = "ring"):
         self.model = model
@@ -112,6 +122,22 @@ class RingWorkerGroup:
         self.compile_count = 0           # compiled-step cache misses
         self._programs: Dict[Tuple[int, str], _RingProgram] = {}
         self._warm: set = set()          # keys whose step_fn has run >= once
+        self._closure_fingerprint = self.closure_fingerprint()
+
+    def cache_key(self, workers: int) -> Tuple[int, str]:
+        """The compiled-step cache key for a (clamped) ring size.
+
+        Everything else the jitted step depends on is closure state fixed at
+        construction (``STATIC_CLOSURE_ATTRS``), so ``(workers, mode)``
+        uniquely identifies an executable — the invariant
+        ``repro.sched.backend.audit_compiled_step_cache`` verifies.
+        """
+        return (int(workers), self.mode)
+
+    def closure_fingerprint(self) -> Tuple:
+        """Identity snapshot of the closed-over static attrs (audit hook)."""
+        return (id(self.model), id(self.optimizer),
+                int(self.global_batch), float(self.lr))
 
     # -- ring formation -----------------------------------------------------
     def resolve_workers(self, requested: int) -> int:
@@ -140,7 +166,7 @@ class RingWorkerGroup:
         return self.form(max(1, survivors))
 
     def _program(self, w: int) -> _RingProgram:
-        key = (w, self.mode)
+        key = self.cache_key(w)
         prog = self._programs.get(key)
         if prog is None:
             mesh = Mesh(np.array(jax.devices()[:w]), ("data",))
@@ -167,7 +193,7 @@ class RingWorkerGroup:
     def _current(self) -> _RingProgram:
         if self.workers <= 0:
             raise RuntimeError("ring not formed; call form() first")
-        return self._programs[(self.workers, self.mode)]
+        return self._programs[self.cache_key(self.workers)]
 
     def reshard(self, tree):
         """Replicate a pytree over the current mesh (elastic reshard: same
@@ -184,12 +210,12 @@ class RingWorkerGroup:
     def warm(self) -> bool:
         """True once the current ring's step has executed at least once —
         i.e. its wall time no longer includes the trace/compile."""
-        return (self.workers, self.mode) in self._warm
+        return self.cache_key(self.workers) in self._warm
 
     def step(self, params, opt_state, batch):
         """Run one compiled train step over the current ring."""
         out = self._current.step_fn(params, opt_state, batch)
-        self._warm.add((self.workers, self.mode))
+        self._warm.add(self.cache_key(self.workers))
         return out
 
 

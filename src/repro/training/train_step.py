@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.dist import collectives
 from repro.dist.compression import ef_compressed_all_reduce
 from repro.dist.overlap import microbatch_grads
+from repro.dist.registry import STEP_MODES
 from repro.training.optimizer import Optimizer
 
 RING_MODES = {
@@ -29,6 +30,11 @@ RING_MODES = {
     "bidir": collectives.bidirectional_ring_all_reduce,
     "psum": collectives.psum_all_reduce,
 }
+
+# every mode make_ring_train_step accepts, in registry order — the single
+# enumerable source shared with repro.dist.registry so the static collective
+# verifier sweeps exactly the modes RingWorkerGroup can run
+RING_STEP_MODES = tuple(STEP_MODES)
 
 
 def make_train_step(model, optimizer: Optimizer, *, lr: float = 3e-4,
@@ -62,6 +68,9 @@ def make_ring_train_step(model, optimizer: Optimizer, axis_name: str, *,
              -> (params, opt_state, metrics[, ef_state]).
     Batch-mean semantics: local grads averaged by world size after reduce.
     """
+    if mode not in RING_STEP_MODES:
+        raise ValueError(f"unknown ring mode {mode!r}; registered modes: "
+                         f"{RING_STEP_MODES}")
     fused = mode == "compressed-fused"
 
     def reduce_tree(grads, ef_state):

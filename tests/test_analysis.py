@@ -16,23 +16,43 @@ Covers the three analysis layers and their acceptance criteria:
   * the kernel checker accepts the known-good quant_ring configurations
     and rejects a non-dividing rows override and a block that overflows
     the tile budget (the gap ``_rows_per_tile`` itself does not police).
+
+ISSUE 8 additions: ``--write-baseline`` placeholders must keep failing the
+gate until replaced (the bulk-silencing fix, pinned), ``--json`` findings
+output, and the sanitizer over the **live** execution path — a
+``REPRO_SANITIZE=1`` LiveBackend run stays bit-identical, still catches
+injected utility-cache corruption, and the compiled-step cache audit
+(`audit_compiled_step_cache`) raises on a mutated ``RingWorkerGroup``.
+The collective verifier itself is covered in
+``tests/test_collectives_verifier.py``.
 """
 
 import dataclasses
+import json
 import os
 import textwrap
 
+import numpy as np
 import pytest
 
 from repro.analysis import SanitizerError, SlotSanitizer, sanitize_enabled
 from repro.analysis import kernels as akern
 from repro.analysis import lint as alint
 from repro.cluster import make_fat_tree
+from repro.cluster.topology import Embedding, Link, Server, SubstrateGraph
 from repro.cluster.trace import JobTraceConfig, generate_jobs
-from repro.core.problem import DDLJSInstance, ScheduleState
+from repro.core.problem import DDLJSInstance, Job, ScheduleState
 from repro.core.rar_model import RarJobProfile
+from repro.core.utility import sqrt_utility
 from repro.kernels.quant_ring import _TILE_BUDGET_BYTES, _rows_per_tile
-from repro.sched import ContentionConfig, OnlineDriver, registry
+from repro.sched import (
+    ContentionConfig,
+    LiveBackend,
+    OnlineDriver,
+    SchedulerBase,
+    SlotDecision,
+    registry,
+)
 from repro.sched.backend import SlotOutcome
 
 
@@ -352,3 +372,195 @@ def test_sanitize_env_integration(instance, monkeypatch):
     assert OnlineDriver(instance).sanitize is True
     monkeypatch.delenv("REPRO_SANITIZE")
     assert OnlineDriver(instance).sanitize is False
+
+
+# ---------------------------------------------------------------------------
+# shared baseline plumbing: --write-baseline placeholders cannot silence
+# ---------------------------------------------------------------------------
+
+_WALLCLOCK_FIXTURE = {
+    "sched/bad.py": """
+        import time
+
+        def decide():
+            return time.time()
+    """,
+}
+
+
+def test_write_baseline_placeholders_cannot_silence_lint(tmp_path):
+    """The pinning test for the --write-baseline fix: a freshly
+    bootstrapped baseline documents the debt but still fails the gate
+    until every `TODO justify` placeholder is replaced."""
+    root = _write_tree(tmp_path, _WALLCLOCK_FIXTURE)
+    baseline = tmp_path / "baseline.txt"
+    assert alint.main(["--root", root, "--baseline", str(baseline),
+                       "--write-baseline"]) == 0
+    text = baseline.read_text()
+    assert "wallclock:sched/bad.py:decide  # TODO justify" in text
+
+    # the regression this pins: written placeholders used to satisfy the
+    # justification requirement and pass; they must fail as malformed
+    assert alint.main(["--root", root, "--baseline", str(baseline)]) == 1
+    loaded = alint.Baseline.load(str(baseline))
+    assert loaded.entries == {}
+    assert loaded.malformed == ["wallclock:sched/bad.py:decide"
+                                "  # TODO justify"]
+
+    # a human-supplied justification is what flips it to green
+    baseline.write_text(text.replace("TODO justify",
+                                     "fixture debt, tracked"))
+    assert alint.main(["--root", root, "--baseline", str(baseline)]) == 0
+
+
+def test_lint_json_findings(tmp_path):
+    root = _write_tree(tmp_path, _WALLCLOCK_FIXTURE)
+    empty = tmp_path / "empty_baseline.txt"
+    empty.write_text("# empty\n")
+    out = tmp_path / "lint.json"
+    rc = alint.main(["--root", root, "--baseline", str(empty),
+                     "--json", str(out)])
+    assert rc == 1
+    data = json.loads(out.read_text())
+    assert data["tool"] == "repro.analysis.lint"
+    assert data["stale"] == [] and data["malformed"] == []
+    (record,) = data["findings"]
+    assert record["rule"] == "wallclock"
+    assert record["path"] == "sched/bad.py"
+    assert record["symbol"] == "decide"
+    assert record["line"] > 0
+    assert record["baselined"] is False
+    assert record["key"] == "wallclock:sched/bad.py:decide"
+
+
+def test_lint_json_marks_suppressed_findings(tmp_path):
+    root = _write_tree(tmp_path, _WALLCLOCK_FIXTURE)
+    ok = tmp_path / "baseline.txt"
+    ok.write_text("wallclock:sched/bad.py:decide  # fixture debt\n")
+    out = tmp_path / "lint.json"
+    assert alint.main(["--root", root, "--baseline", str(ok),
+                       "--json", str(out)]) == 0
+    (record,) = json.loads(out.read_text())["findings"]
+    assert record["baselined"] is True
+
+
+# ---------------------------------------------------------------------------
+# the sanitizer under LiveBackend (satellite 3): live execution stays
+# bit-identical and the audit catches injected corruption
+# ---------------------------------------------------------------------------
+
+def _live_instance(horizon=3):
+    servers = [Server(0, 0, {"gpus": 4.0}), Server(1, 0, {"gpus": 4.0})]
+    links = []
+    for s in servers:
+        links.append(Link(s.node, "r0", 100.0))
+        links.append(Link("r0", s.node, 100.0))
+    graph = SubstrateGraph(servers, links, n_racks=1, n_core=0)
+    job = Job(id=0, arrival=0, max_workers=2, demands={"gpus": 1.0},
+              budgets={"gpus": 8.0}, bandwidth=1.0, zeta=1.0,
+              utility=sqrt_utility(1.0))
+    return DDLJSInstance(graph=graph, jobs=[job], horizon=horizon)
+
+
+class _ColocTwo(SchedulerBase):
+    """Places a colocated 2-worker ring for job 0 whenever active."""
+
+    name = "coloc2-analysis"
+
+    def decide(self, ctx):
+        embeddings = []
+        for job in ctx.active_jobs():
+            emb = Embedding(job.id, [(0, 2)], [], job.bandwidth)
+            if ctx.res.feasible(emb, job.demands):
+                ctx.res.commit(emb, job.demands)
+                embeddings.append(emb)
+        return SlotDecision(ctx.t, embeddings, 0.0, 0.0,
+                            len(ctx.active_jobs()), len(embeddings))
+
+
+class _StubTrainer:
+    """Duck-typed ElasticTrainer: replays the run_slot contract."""
+
+    def __init__(self):
+        self.params = {"w": np.zeros(16, np.float32)}
+        self.step = 0
+
+    def run_slot(self, plan):
+        self.step += plan.steps
+        return {"steps": plan.steps, "loss": 1.0, "workers": plan.workers,
+                "worker_steps": plan.steps * plan.workers, "timings": {},
+                "re_rings": 0}
+
+    def restore(self):
+        return True
+
+
+def _live_run(monkeypatch, *, env=None, audit_cache=None, group=None):
+    if env is None:
+        monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    else:
+        monkeypatch.setenv("REPRO_SANITIZE", env)
+    trainer = _StubTrainer()
+    if group is not None:
+        trainer.group = group
+    backend = LiveBackend({0: trainer}, steps_per_slot=4, calibrate=False,
+                          audit_cache=audit_cache)
+    driver = OnlineDriver(_live_instance(), backend=backend)
+    return driver.run(_ColocTwo()), backend
+
+
+def test_live_backend_sanitized_run_is_bit_identical(monkeypatch):
+    """REPRO_SANITIZE=1 over the live execution path (driver sanitizer +
+    the compiled-step cache audit) must not perturb any accounting."""
+    plain, _ = _live_run(monkeypatch)
+    checked, backend = _live_run(monkeypatch, env="1")
+    assert backend.audit_cache is True
+    assert checked.records == plain.records
+    assert checked.state.z == plain.state.z
+    assert checked.total_utility == plain.total_utility
+    assert [r["factor"] for r in backend.reports] == [
+        pytest.approx(1.0)] * len(backend.reports)
+
+
+def test_live_backend_sanitizer_catches_utility_cache_corruption(
+        monkeypatch):
+    """The injected corruption from the sim tests, now under LiveBackend:
+    the default live path silently accepts it, REPRO_SANITIZE=1 raises."""
+    monkeypatch.setattr(ScheduleState, "_test_skip_utility_refresh", True)
+    silent, _ = _live_run(monkeypatch)
+    assert silent.records, "default live path must not detect corruption"
+    with pytest.raises(SanitizerError, match="cached utility"):
+        _live_run(monkeypatch, env="1")
+
+
+def test_live_backend_audit_catches_mutated_group(monkeypatch):
+    """A trainer whose RingWorkerGroup mutated a closed-over static attr:
+    unaudited runs serve the stale executable, audited runs raise."""
+    from repro.training.elastic import RingWorkerGroup
+    from repro.training.optimizer import make_optimizer
+
+    class _TinyModel:
+        def init(self, key, dtype=None):
+            return {"w": np.zeros(4, np.float32)}
+
+        def loss(self, params, batch):
+            return 0.0
+
+    def mutated_group():
+        group = RingWorkerGroup(_TinyModel(), make_optimizer("sgdm"),
+                                global_batch=8, lr=1e-2, mode="ring")
+        group.lr = 5e-3  # the hazard audit_compiled_step_cache detects
+        return group
+
+    silent, _ = _live_run(monkeypatch, group=mutated_group())
+    assert silent.records, "unaudited path must not detect the mutation"
+    with pytest.raises(SanitizerError, match="cache audit failed"):
+        _live_run(monkeypatch, env="1", group=mutated_group())
+
+
+def test_live_backend_audit_cache_explicit_overrides_env(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    backend = LiveBackend({}, audit_cache=False)
+    assert backend.audit_cache is False
+    monkeypatch.delenv("REPRO_SANITIZE")
+    assert LiveBackend({}, audit_cache=True).audit_cache is True
