@@ -11,7 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   re_ring  mid-slot re-ring (elastic reshard) cost vs the paper's
            checkpoint-preemption model (spawns 8 XLA host devices)
   compress  compressed-ring microbench: f32 ring vs XLA int8 ring vs the
-            fused single-ppermute Pallas ring (spawns 8 XLA host devices;
+            fused single-ppermute Pallas ring, plus the bf16/fp8 wire
+            formats and the bucketed overlap pipeline (exposed-comm +
+            hidden-fraction rows; spawns 8 XLA host devices;
             wire-bytes + ppermute-count + us/call rows)
 
 Schedulers are resolved by name through ``repro.sched.registry`` — pass
@@ -380,6 +382,15 @@ def compress_ring_bench(full: bool = False) -> None:
     half the ppermutes per hop of the XLA int8 ring (the single-message
     packed layout) — the same invariant tests/test_wire_cost.py pins on the
     traced jaxpr.
+
+    On top of the original three rows (whose format is pinned — downstream
+    artifact diffing relies on it) the bench times the bf16 and fp8 fused
+    wires and the 4-bucket overlap pipeline, and derives the overlap mode's
+    *exposed* communication: with n buckets launched in reverse-autodiff
+    order only the last bucket's chain cannot hide behind backward compute,
+    so the pipeline-ideal hidden fraction is (n-1)/n and
+    ``exposed = total * (1 - h)`` — the same discount
+    ``rar_model.rar_iteration_time(overlap_hidden_fraction=h)`` prices.
     """
     import os
     import subprocess
@@ -387,7 +398,11 @@ def compress_ring_bench(full: bool = False) -> None:
 
     d = (1 << 22) if full else (1 << 18)
     repeats = 20 if full else 8
-    record_meta("compress", d=d, repeats=repeats, devices=8, data_seed=0)
+    n_buckets = 4
+    record_meta("compress", d=d, repeats=repeats, devices=8, data_seed=0,
+                overlap_n_buckets=n_buckets,
+                overlap_hidden_fraction=(n_buckets - 1) / n_buckets,
+                wire_modes=["int8", "bf16", "fp8"])
     prog = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -419,6 +434,25 @@ def compress_ring_bench(full: bool = False) -> None:
                       fused=False), "xla_int8_ring")
         bench(partial(compressed_ring_all_reduce, axis_name="d",
                       fused=True), "fused_int8_ring")
+
+        from repro.dist.compression import fused_wire_all_reduce
+        from repro.dist.overlap import bucketed_ring_reduce
+
+        bench(partial(fused_wire_all_reduce, axis_name="d", wire="bf16"),
+              "bf16_fused_ring")
+        bench(partial(fused_wire_all_reduce, axis_name="d", wire="fp8"),
+              "fp8_fused_ring")
+
+        NB = {n_buckets}
+        def overlap(a):
+            # the overlap step's wire path: split the gradient into NB
+            # equal leaves and ring each bucket through its own chain
+            leaves = dict(enumerate(jnp.split(a, NB, axis=-1)))
+            out = bucketed_ring_reduce(leaves, "d", variant="int8-fused",
+                                       n_buckets=NB)
+            return jnp.concatenate([out[k] for k in range(NB)],
+                                   axis=-1) / W
+        bench(overlap, "overlap_int8_ring")
     """)
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
@@ -431,19 +465,32 @@ def compress_ring_bench(full: bool = False) -> None:
     if out.returncode != 0:
         raise RuntimeError(f"compress benchmark failed:\n{out.stderr[-2000:]}")
 
+    from repro.core.rar_model import wire_formula
     from repro.dist.collectives import ring_wire_elements
     from repro.dist.compression import (
         compressed_ring_ppermutes,
         compressed_wire_bytes,
+        fused_wire_bytes,
     )
+    from repro.dist.overlap import plan_bucket_sizes
 
     w = 8
+    formula = wire_formula("int8-fused")
+    segs = list(plan_bucket_sizes([d // n_buckets] * n_buckets, n_buckets,
+                                  reverse=True))
     costs = {
         "f32_ring": (ring_wire_elements(d, w) * 4.0, 2 * (w - 1)),
         "xla_int8_ring": (compressed_wire_bytes(d, w),
                           compressed_ring_ppermutes(w)),
         "fused_int8_ring": (compressed_wire_bytes(d, w, fused=True),
                             compressed_ring_ppermutes(w, fused=True)),
+        "bf16_fused_ring": (fused_wire_bytes(d, w, wire="bf16"),
+                            compressed_ring_ppermutes(w, fused=True)),
+        "fp8_fused_ring": (fused_wire_bytes(d, w, wire="fp8"),
+                           compressed_ring_ppermutes(w, fused=True)),
+        "overlap_int8_ring": (
+            sum(formula.bytes_per_worker(s, w) for s in segs),
+            len(segs) * formula.messages(w)),
     }
     timed: Dict[str, float] = {}
     for line in out.stdout.splitlines():
@@ -458,6 +505,12 @@ def compress_ring_bench(full: bool = False) -> None:
     if "xla_int8_ring" in timed and "fused_int8_ring" in timed:
         speedup = timed["xla_int8_ring"] / max(timed["fused_int8_ring"], 1e-12)
         emit("compress/fused_over_xla_int8", 0.0, f"speedup={speedup:.3f}")
+    if "overlap_int8_ring" in timed:
+        h = (n_buckets - 1) / n_buckets
+        total_us = timed["overlap_int8_ring"] * 1e6
+        emit("compress/overlap_exposed_comm", total_us * (1.0 - h),
+             f"hidden_fraction={h:.3f};n_buckets={n_buckets};"
+             f"total_comm_us={total_us:.1f};d={d};w={w}")
 
 
 class _TimedScheduler:

@@ -85,7 +85,8 @@ def main() -> None:
         # profile with compression="int8-fused" (job 1 above) trains over
         # the fused single-ppermute int8 ring, the rest stay on the
         # paper-faithful f32 ring — pricing and execution cannot drift
-        mode = {"int8": "compressed", "int8-fused": "compressed-fused"}.get(
+        mode = {"int8": "compressed", "int8-fused": "compressed-fused",
+                "bf16-fused": "bf16-fused", "fp8-fused": "fp8-fused"}.get(
             job.profile.compression, "ring")
         trainers[job.id] = ElasticTrainer(
             model, make_optimizer("adamw"), data, global_batch=8,

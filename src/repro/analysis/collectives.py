@@ -29,12 +29,16 @@ must equal the scheduler's formulas exactly: ``ppermute`` count vs
 multiplier), payload bytes vs ``rar_ring_bytes_per_worker`` /
 ``rar_compressed_bytes_per_worker`` (evaluated on the executed, padded
 layout via :func:`repro.core.rar_model.wire_formula`), and — for the fused
-int8 layout — every hop message must be a single int8 buffer of exactly
-``payload + scale-trailer`` bytes per
-:func:`repro.kernels.quant_ring.hop_message_layout`.
+layouts — every hop message must match the declared wire format exactly:
+one int8 buffer of ``payload + scale-trailer`` bytes per
+:func:`repro.kernels.quant_ring.hop_message_layout` for the int8/fp8 wires,
+one bare bfloat16 buffer of the padded chunk for the bf16 wire. Overlap
+step modes (``StepModeSpec.n_buckets``) price per *bucket* via the same
+``repro.dist.overlap.plan_buckets`` plan the executed reduction uses.
 
 **(iv) recompile-hazard** — ``RingWorkerGroup`` caches compiled steps by
-``(workers, mode)``; anything else influencing the jit cache key turns the
+``(workers, mode, n_buckets, wire_dtype)``; anything else influencing the
+jit cache key turns the
 ~6x re-ring advantage into per-slot recompiles. The audit detects weak-typed
 leaves in the step's parameter/optimizer-state templates (a Python scalar in
 the signature re-keys the cache), dtype drift between a step's input and
@@ -352,13 +356,28 @@ def check_deadlock(sites: Sequence[CollectiveSite]) -> List[str]:
 # axis (iii): pricing agreement
 # ---------------------------------------------------------------------------
 
-def _fused_message_errors(sites: Sequence[CollectiveSite], d: int,
-                          w: int) -> List[str]:
-    """Per-message layout check for the fused int8 wire format."""
+def _fused_message_errors(sites: Sequence[CollectiveSite], d: int, w: int,
+                          compression: str = "int8-fused") -> List[str]:
+    """Per-message layout check for the fused wire formats.
+
+    int8 and fp8 payloads travel bitcast to one int8 buffer of exactly
+    ``payload + scale-trailer`` bytes; the bf16 wire is a bare bfloat16
+    buffer of the padded chunk (2 B/element, no trailer).
+    """
     from repro.dist.compression import DEFAULT_BLOCK
     from repro.kernels.quant_ring import hop_message_layout
 
     layout = hop_message_layout(-(-d // w), block=DEFAULT_BLOCK)
+    if compression == "bf16-fused":
+        want_dtype = "bfloat16"
+        want_bytes = 2 * layout.payload_bytes  # padded chunk, no trailer
+        expect = (f"bfloat16[{want_bytes} B] (2 B x {layout.payload_bytes} "
+                  "padded elements, no scale trailer)")
+    else:  # int8-fused / fp8-fused: 1 B payload + bitcast f32 scale trailer
+        want_dtype = "int8"
+        want_bytes = layout.message_bytes
+        expect = (f"int8[{want_bytes} B] ({layout.payload_bytes} payload + "
+                  f"{layout.trailer_bytes} trailer)")
     msgs: List[str] = []
     seen = set()
     for s in sites:
@@ -368,13 +387,11 @@ def _fused_message_errors(sites: Sequence[CollectiveSite], d: int,
         if sig in seen:
             continue
         seen.add(sig)
-        if s.dtype != "int8" or s.nbytes != layout.message_bytes:
+        if s.dtype != want_dtype or s.nbytes != want_bytes:
             msgs.append(
                 f"fused hop message is {s.dtype}[{s.nbytes} B] but the "
-                f"packed payload-plus-trailer layout for a {-(-d // w)}-"
-                f"element chunk is int8[{layout.message_bytes} B] "
-                f"({layout.payload_bytes} payload + {layout.trailer_bytes} "
-                "trailer) — kernel wire format and scheduler pricing have "
+                f"{compression} layout for a {-(-d // w)}-element chunk is "
+                f"{expect} — kernel wire format and scheduler pricing have "
                 "drifted")
     return msgs
 
@@ -384,7 +401,7 @@ def check_pricing(variant, sites: Sequence[CollectiveSite], w: int,
     """Axis (iii) messages for one traced jaxpr vs the rar_model formulas."""
     msgs: List[str] = []
     count = _ppermute_count(sites)
-    expected = variant.expected_messages(w)
+    expected = variant.expected_messages(w, d)
     if count != expected:
         msgs.append(
             f"traced jaxpr issues {count} ppermute(s) but rar_model prices "
@@ -400,8 +417,10 @@ def check_pricing(variant, sites: Sequence[CollectiveSite], w: int,
                 f"prices {expect_bytes:g} B for d={d}, w={w} "
                 f"(compression={variant.compression!r}) — Eq. (1)'s wire "
                 "term no longer matches what the ring sends")
-        if variant.compression == "int8-fused":
-            msgs.extend(_fused_message_errors(sites, d, w))
+        if variant.compression in ("int8-fused", "bf16-fused", "fp8-fused") \
+                and not variant.n_buckets:
+            msgs.extend(_fused_message_errors(sites, d, w,
+                                              variant.compression))
         extras = sorted({s.primitive for s in sites
                          if s.primitive != "ppermute"})
         if extras:
@@ -433,19 +452,31 @@ def check_step_pricing(spec, sites: Sequence[CollectiveSite], w: int,
                 f"{n_leaves + 1} ({n_leaves} grad leaves + 1 loss pmean)")
         return msgs
     leaf_variant = spec.leaf_variant()
-    expected = sum(leaf_variant.expected_messages(w) for _ in leaf_sizes)
+    if spec.n_buckets:
+        # overlap mode: one ring per planned bucket, not per leaf — price
+        # with the identical reverse-autodiff plan the executed reduction
+        # uses (overlap.plan_buckets), so they cannot drift apart
+        from repro.dist.overlap import plan_bucket_sizes
+
+        payloads = list(plan_bucket_sizes(leaf_sizes, spec.n_buckets,
+                                          reverse=True))
+        unit = f"{len(payloads)} bucket(s) over leaves {list(leaf_sizes)}"
+    else:
+        payloads = list(leaf_sizes)
+        unit = f"{n_leaves} leaves"
+    expected = sum(leaf_variant.expected_messages(w) for _ in payloads)
     if count != expected:
         msgs.append(
             f"step traces {count} ppermute(s) but rar_model prices "
-            f"{expected} ({n_leaves} leaves x "
+            f"{expected} ({unit} x "
             f"{leaf_variant.expected_messages(w)}) for w={w}")
     total = _ppermute_bytes(sites)
     expect_bytes = sum(leaf_variant.expected_bytes(size, w)
-                       for size in leaf_sizes)
+                       for size in payloads)
     if abs(total - expect_bytes) > 1e-6 * max(expect_bytes, 1.0):
         msgs.append(
             f"step ppermute payloads total {total} B but rar_model prices "
-            f"{expect_bytes:g} B over leaves {list(leaf_sizes)} at w={w}")
+            f"{expect_bytes:g} B over {unit} at w={w}")
     if n_psum != 1:
         msgs.append(f"step traces {n_psum} psum(s); expected exactly 1 "
                     "(the loss pmean) — extra collectives are unpriced")

@@ -23,6 +23,19 @@ per check axis of :mod:`repro.analysis.collectives`:
     defect class the kernel checker's must-reject suite covers via
     :func:`trailer_mismatch_kernel_spec` — one shared constant, two
     checkers);
+  * ``broken-fp8-trailer-mismatch`` — the same short trailer on a ring
+    priced as the fp8 wire: fp8 shares the int8 message layout (1 B payload
+    + f32 trailer), so its pricing must reject the identical defect
+    (**pricing**);
+  * ``broken-bucket-missing-segment`` — a bucket pipeline declared
+    ``n_buckets=3`` that rings only two of its three segments (the third
+    passes through unreduced): a silently-wrong reduction whose ppermute
+    count falls short of the priced per-segment chains (**pricing**);
+  * ``broken-bucket-shared-chain``   — declared ``n_buckets=3`` but all
+    buckets funnel through ONE concatenated ppermute chain: total payload
+    bytes coincide with the per-segment plan, so only the per-message
+    accounting (one chain's messages vs three) catches it — the defect an
+    overlap mode would have if its buckets shared a ring (**pricing**);
   * :func:`weak_typed_template` — a parameter template with a weak-typed
     scalar leaf: a Python-float-shaped entry in the jitted step's signature
     re-keys the compilation cache on every strongly-typed caller
@@ -42,6 +55,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.dist import collectives
+from repro.dist.overlap import even_bucket_sizes
 from repro.dist.registry import RingVariant
 from repro.kernels.quant_ring import hop_message_layout
 
@@ -154,6 +169,40 @@ def _trailer_mismatch(axis_name: str) -> Callable:
     return run
 
 
+def _bucket_missing_segment(axis_name: str) -> Callable:
+    def run(x: jax.Array) -> jax.Array:
+        w = lax.axis_size(axis_name)
+        if w == 1:
+            return x
+        flat = x.reshape(-1)
+        segs = even_bucket_sizes(flat.size, 3)
+        parts = []
+        off = 0
+        for k, seg in enumerate(segs):
+            part = flat[off: off + seg]
+            if k < len(segs) - 1:  # the last segment never rings
+                part = collectives.ring_all_reduce(part, axis_name=axis_name)
+            parts.append(part)
+            off += seg
+        return jnp.concatenate(parts).reshape(x.shape)
+    return run
+
+
+def _bucket_shared_chain(axis_name: str) -> Callable:
+    def run(x: jax.Array) -> jax.Array:
+        w = lax.axis_size(axis_name)
+        if w == 1:
+            return x
+        # one concatenated ring where three per-bucket chains are declared:
+        # total payload bytes match the even-segment plan (same padded
+        # elements overall), but one chain's 2(w-1) messages stand in for
+        # the priced 3 x 2(w-1)
+        flat = x.reshape(-1)
+        return collectives.ring_all_reduce(
+            flat, axis_name=axis_name).reshape(x.shape)
+    return run
+
+
 def broken_ring_variants() -> List[Tuple[RingVariant, str]]:
     """(variant, check axis that must fire) — the seeded mutation suite."""
     return [
@@ -172,6 +221,18 @@ def broken_ring_variants() -> List[Tuple[RingVariant, str]]:
          "pricing"),
         (RingVariant(name="broken-trailer-mismatch",
                      build=_trailer_mismatch, compression="int8-fused",
+                     source=_SOURCE),
+         "pricing"),
+        (RingVariant(name="broken-fp8-trailer-mismatch",
+                     build=_trailer_mismatch, compression="fp8-fused",
+                     source=_SOURCE),
+         "pricing"),
+        (RingVariant(name="broken-bucket-missing-segment",
+                     build=_bucket_missing_segment, n_buckets=3,
+                     source=_SOURCE),
+         "pricing"),
+        (RingVariant(name="broken-bucket-shared-chain",
+                     build=_bucket_shared_chain, n_buckets=3,
                      source=_SOURCE),
          "pricing"),
     ]

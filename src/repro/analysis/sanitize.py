@@ -207,20 +207,23 @@ class SlotSanitizer:
         self._wire_checked.add(key)
         # lazy: pulls jax via repro.dist — only jobs actually priced with a
         # compressed ring pay the import
-        from repro.core.rar_model import (
-            compressed_ring_messages,
-            rar_compressed_bytes_per_worker,
-        )
+        from repro.core.rar_model import wire_formula
         from repro.dist.compression import (
             compressed_ring_ppermutes,
             compressed_wire_bytes,
+            fused_wire_bytes,
         )
-        fused = prof.compression == "int8-fused"
+        formula = wire_formula(prof.compression)
+        fused = prof.compression != "int8"
+        wire_name = {"bf16-fused": "bf16", "fp8-fused": "fp8"}.get(
+            prof.compression)
         d = int(prof.d)
         for w in (2, 3, 8):
-            model = float(rar_compressed_bytes_per_worker(
-                float(d), w, fused=fused))
-            wire = float(compressed_wire_bytes(d, w, fused=fused))
+            model = float(formula.bytes_per_worker(float(d), w))
+            if wire_name is None:
+                wire = float(compressed_wire_bytes(d, w, fused=fused))
+            else:
+                wire = float(fused_wire_bytes(d, w, wire=wire_name))
             if abs(model - wire) > 1e-6 * max(wire, 1.0):
                 raise SanitizerError(
                     f"wire-byte drift for job {job.id} "
@@ -228,11 +231,12 @@ class SlotSanitizer:
                     f"rar_model prices {model!r} bytes but the ring sends "
                     f"{wire!r} — Eq. (1) no longer prices what the "
                     "collective transmits")
-            if int(compressed_ring_messages(w, fused=fused)) != \
+            if int(formula.messages(w)) != \
                     compressed_ring_ppermutes(w, fused=fused):
                 raise SanitizerError(
-                    f"message-count drift (w={w}, fused={fused}): rar_model "
-                    "and repro.dist.compression disagree on ppermutes per "
+                    f"message-count drift (w={w}, "
+                    f"compression={prof.compression!r}): rar_model and "
+                    "repro.dist.compression disagree on ppermutes per "
                     "all-reduce")
 
     # -- helpers --------------------------------------------------------------

@@ -39,14 +39,21 @@ class RarJobProfile:
       batch_size: mini-batch size ``M``.
       overhead: per-iteration negotiation/ACK latency ``gamma`` (seconds).
       compression: ring wire layout — ``None`` (f32 ring), ``"int8"`` (XLA
-        compressed ring: two ppermutes per hop) or ``"int8-fused"`` (the
-        single-ppermute Pallas pipeline). Changes Eq. (1)'s wire term to the
-        compressed byte count, so the scheduler prices what the ring
-        actually sends (``repro.dist.compression`` layouts).
+        compressed ring: two ppermutes per hop) or one of the
+        single-ppermute Pallas pipelines (``"int8-fused"``, ``"fp8-fused"``
+        — e4m3 payload + per-block scales, ``"bf16-fused"`` — trailer-free
+        2-byte payload). Changes Eq. (1)'s wire term to the compressed byte
+        count, so the scheduler prices what the ring actually sends
+        (``repro.dist.compression`` layouts).
       message_overhead: optional per-ppermute latency slice of gamma
         (seconds/message), priced uniformly across layouts via
         :func:`rar_ring_messages` — one message per hop for the f32 and
-        fused int8 rings, two for the XLA int8 layout.
+        fused rings, two for the XLA int8 layout.
+      overlap_hidden_fraction: fraction h in [0, 1] of the collective term
+        hidden behind the backward pass by per-bucket overlapped rings (the
+        ``"compressed-fused-overlap"`` step mode); Eq. (1) prices only the
+        exposed ``(1 - h) * comm``. 0 (default) is the fully-serial ring,
+        bit-identical to the pre-overlap pricing.
     """
 
     d: float
@@ -58,6 +65,7 @@ class RarJobProfile:
     overhead: float = 0.0
     compression: Optional[str] = None
     message_overhead: float = 0.0
+    overlap_hidden_fraction: float = 0.0
 
     def iteration_time(self, w: Array) -> Array:
         return rar_iteration_time(
@@ -71,6 +79,7 @@ class RarJobProfile:
             overhead=self.overhead,
             compression=self.compression,
             message_overhead=self.message_overhead,
+            overlap_hidden_fraction=self.overlap_hidden_fraction,
         )
 
     def iterations_per_slot(self, w: Array, slot_seconds: float) -> Array:
@@ -103,17 +112,22 @@ def rar_allreduce_time(w: Array, d: float, bandwidth: float, reduce_speed: float
 
 def rar_compressed_bytes_per_worker(d: float, w: Array, *,
                                     fused: bool = False, block: int = 4096,
-                                    scale_bytes: int = 4) -> Array:
-    """Per-worker wire bytes of one int8-compressed ring all-reduce.
+                                    scale_bytes: int = 4,
+                                    payload_elem_bytes: int = 1,
+                                    trailer: bool = True) -> Array:
+    """Per-worker wire bytes of one compressed ring all-reduce.
 
     XLA layout (``fused=False``): 2(w-1) hops of a ceil(d/w)-byte int8
     payload plus a separate f32 scale message. Fused single-ppermute layout:
     2(w-1) hops of one packed message — the payload block-padded to whole
-    ``block`` sub-blocks plus one f32 scale per sub-block in the trailer.
-    Must agree with ``repro.dist.compression.compressed_wire_bytes`` — the
-    scheduler's cost model and the executable layer share the formula
-    (asserted in tests/test_wire_cost.py).
+    ``block`` sub-blocks at ``payload_elem_bytes`` per element (1 for
+    int8/fp8, 2 for bf16) plus, when ``trailer`` (the scaled formats), one
+    f32 scale per sub-block in the trailer; the bf16 wire carries no scales.
+    Must agree with ``repro.dist.compression.compressed_wire_bytes`` /
+    ``fused_wire_bytes`` — the scheduler's cost model and the executable
+    layer share the formula (asserted in tests/test_wire_cost.py).
     """
+    trailer_bytes = float(scale_bytes) if trailer else 0.0
     if isinstance(w, (int, float)):
         if w <= 1:
             return 0.0
@@ -121,15 +135,16 @@ def rar_compressed_bytes_per_worker(d: float, w: Array, *,
         if fused:
             b = max(1, min(int(block), c))
             c_pad = -(-c // b) * b
-            return 2.0 * (w - 1.0) * (c_pad
-                                      + float(scale_bytes) * (c_pad // b))
+            return 2.0 * (w - 1.0) * (float(payload_elem_bytes) * c_pad
+                                      + trailer_bytes * (c_pad // b))
         return 2.0 * (w - 1.0) * (float(c) + float(scale_bytes))
     w = jnp.asarray(w, dtype=jnp.float32)
     c = jnp.ceil(d / jnp.maximum(w, 1.0))
     if fused:
         b = jnp.maximum(1.0, jnp.minimum(float(block), c))
         c_pad = jnp.ceil(c / b) * b
-        per_hop = c_pad + float(scale_bytes) * (c_pad / b)
+        per_hop = (float(payload_elem_bytes) * c_pad
+                   + trailer_bytes * (c_pad / b))
     else:
         per_hop = c + float(scale_bytes)
     return jnp.where(w <= 1.0, 0.0, 2.0 * (w - 1.0) * per_hop)
@@ -158,7 +173,16 @@ def rar_ring_messages(w: Array, *, compression: Optional[str] = None) -> Array:
     return compressed_ring_messages(w, fused=compression != "int8")
 
 
-WIRE_COMPRESSIONS = (None, "int8", "int8-fused")
+WIRE_COMPRESSIONS = (None, "int8", "int8-fused", "bf16-fused", "fp8-fused")
+
+# fused wire layouts: compression -> (payload bytes/element, f32 trailer?).
+# int8 and fp8 both ship 1-byte payloads plus one bitcast f32 scale per
+# sub-block; bf16 ships a bare 2-byte payload (no scales to carry).
+_FUSED_WIRE_LAYOUTS = {
+    "int8-fused": (1, True),
+    "fp8-fused": (1, True),
+    "bf16-fused": (2, False),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,7 +201,7 @@ class WireFormula:
     (``repro.analysis.collectives``) compares traced jaxprs against.
     """
 
-    compression: Optional[str]  # None | "int8" | "int8-fused"
+    compression: Optional[str]  # one of WIRE_COMPRESSIONS
     elem_bytes: int = 4
     block: int = 4096
     scale_bytes: int = 4
@@ -195,9 +219,15 @@ class WireFormula:
             d_wire = (-(-int(d) // w)) * w if executed else d
             return float(rar_ring_bytes_per_worker(
                 d_wire, w, elem_bytes=self.elem_bytes))
+        if self.compression == "int8":
+            return float(rar_compressed_bytes_per_worker(
+                d, w, fused=False,
+                block=self.block, scale_bytes=self.scale_bytes))
+        payload_bytes, trailer = _FUSED_WIRE_LAYOUTS[self.compression]
         return float(rar_compressed_bytes_per_worker(
-            d, w, fused=self.compression == "int8-fused",
-            block=self.block, scale_bytes=self.scale_bytes))
+            d, w, fused=True, block=self.block,
+            scale_bytes=self.scale_bytes,
+            payload_elem_bytes=payload_bytes, trailer=trailer))
 
 
 def wire_formula(compression: Optional[str], *, elem_bytes: int = 4,
@@ -220,17 +250,21 @@ def compressed_rar_allreduce_time(
     w: Array, d: float, bandwidth: float, reduce_speed: float, *,
     elem_bytes: int = 4, fused: bool = False, block: int = 4096,
     scale_bytes: int = 4, message_overhead: float = 0.0,
+    payload_elem_bytes: int = 1, trailer: bool = True,
 ) -> Array:
-    """Eq. (1)'s collective term re-priced for the int8 ring.
+    """Eq. (1)'s collective term re-priced for a compressed ring.
 
     Wire time = compressed bytes over the link's byte rate
     (``bandwidth * elem_bytes`` — profiles carry b in f32 elements/sec);
     reduction still touches d(w-1)/w elements; ``message_overhead`` is the
     per-ppermute latency slice of gamma, paid once per message — the fused
     single-ppermute hop halves it relative to the two-message XLA layout.
+    ``payload_elem_bytes``/``trailer`` select the fused payload layout
+    (int8/fp8 vs the trailer-free bf16 wire).
     """
     wire_bytes = rar_compressed_bytes_per_worker(
-        d, w, fused=fused, block=block, scale_bytes=scale_bytes)
+        d, w, fused=fused, block=block, scale_bytes=scale_bytes,
+        payload_elem_bytes=payload_elem_bytes, trailer=trailer)
     byte_rate = bandwidth * float(elem_bytes)
     messages = compressed_ring_messages(w, fused=fused)
     if isinstance(w, (int, float)):
@@ -258,30 +292,48 @@ def rar_iteration_time(
     overhead: float = 0.0,
     compression: Optional[str] = None,
     message_overhead: float = 0.0,
+    overlap_hidden_fraction: float = 0.0,
 ) -> Array:
     """Eq. (1): per-iteration RAR training time.
 
     ``w`` may be a scalar or an array of candidate worker counts; w <= 1
     degenerates to compute-only time (no ring traffic), matching the paper's
     single-worker case. ``compression`` switches the collective term to the
-    int8 ring's byte count (``"int8"`` — the two-ppermute XLA layout,
-    ``"int8-fused"`` — the single-ppermute Pallas layout). A nonzero
-    ``message_overhead`` prices the per-ppermute latency slice of gamma
-    uniformly across layouts (:func:`rar_ring_messages`): the f32 and fused
-    rings pay it 2(w-1) times, the XLA int8 layout 4(w-1).
+    compressed ring's byte count (``"int8"`` — the two-ppermute XLA layout;
+    ``"int8-fused"``/``"fp8-fused"``/``"bf16-fused"`` — the single-ppermute
+    Pallas layouts). A nonzero ``message_overhead`` prices the per-ppermute
+    latency slice of gamma uniformly across layouts
+    (:func:`rar_ring_messages`): the f32 and fused rings pay it 2(w-1)
+    times, the XLA int8 layout 4(w-1).
+
+    ``overlap_hidden_fraction`` (h in [0, 1]) models per-bucket rings
+    launched while the backward pass is still producing gradients (the
+    ``"compressed-fused-overlap"`` train-step mode): a fraction h of the
+    collective term runs concurrently with compute, so only the *exposed*
+    ``(1 - h) * comm`` is priced. h = 0 is today's fully-serial Eq. (1),
+    bit-identical; h = 1 is fully compute-hidden communication.
     """
+    if not 0.0 <= overlap_hidden_fraction <= 1.0:
+        raise ValueError("overlap_hidden_fraction must be in [0, 1], got "
+                         f"{overlap_hidden_fraction!r}")
     if compression is None:
         comm = rar_allreduce_time(w, d, bandwidth, reduce_speed)
-    elif compression in ("int8", "int8-fused"):
+    elif compression == "int8":
         comm = compressed_rar_allreduce_time(
-            w, d, bandwidth, reduce_speed,
-            fused=compression == "int8-fused")
+            w, d, bandwidth, reduce_speed, fused=False)
+    elif compression in _FUSED_WIRE_LAYOUTS:
+        payload_bytes, trailer = _FUSED_WIRE_LAYOUTS[compression]
+        comm = compressed_rar_allreduce_time(
+            w, d, bandwidth, reduce_speed, fused=True,
+            payload_elem_bytes=payload_bytes, trailer=trailer)
     else:
         raise ValueError(f"unknown compression {compression!r}; "
-                         "expected None, 'int8' or 'int8-fused'")
+                         f"expected one of {WIRE_COMPRESSIONS}")
     if message_overhead:
         comm = comm + rar_ring_messages(
             w, compression=compression) * message_overhead
+    if overlap_hidden_fraction:
+        comm = comm * (1.0 - overlap_hidden_fraction)
     compute = t_fwd_per_sample * batch_size + t_bwd
     return comm + compute + overhead
 
@@ -306,17 +358,27 @@ def rar_iteration_time_asymptote(
 
 
 def effective_iteration_time(profile: "RarJobProfile", effective_bw: float,
-                             w: Array) -> Array:
+                             w: Array, *,
+                             overlap_hidden_fraction: Optional[float] = None,
+                             ) -> Array:
     """Eq. (1) re-priced with a *contended* per-hop bandwidth.
 
     ``effective_bw`` is the fair-share bottleneck bandwidth the ring actually
     sees this slot (elements/sec, same units as ``profile.bandwidth``) — e.g.
     ``ResourceState.effective_bandwidth`` scaled into element units. All other
     Eq. (1) terms — including the profile's compressed wire layout — are
-    unchanged.
+    unchanged. ``overlap_hidden_fraction`` overrides the profile's overlap
+    term (``None`` keeps it): G-VNE contention discounts thereby price only
+    the *exposed* fraction of the ring — comm a bucketed overlapped step
+    hides behind the backward pass neither costs iteration time nor
+    (proportionally) competes for the contended link during the exposed
+    window. Passing ``0`` prices the fully-serial ring, bit-identical to the
+    pre-overlap behavior.
     """
     if effective_bw <= 0.0:
         return float("inf")
+    h = (profile.overlap_hidden_fraction
+         if overlap_hidden_fraction is None else overlap_hidden_fraction)
     return rar_iteration_time(
         w,
         d=profile.d,
@@ -328,6 +390,7 @@ def effective_iteration_time(profile: "RarJobProfile", effective_bw: float,
         overhead=profile.overhead,
         compression=profile.compression,
         message_overhead=profile.message_overhead,
+        overlap_hidden_fraction=h,
     )
 
 
@@ -381,6 +444,7 @@ def profile_from_arch(
     overhead: float = 5e-3,
     compression: Optional[str] = None,
     message_overhead: float = 0.0,
+    overlap_hidden_fraction: float = 0.0,
 ) -> RarJobProfile:
     """Derive an Eq.-(1) profile from a real architecture config.
 
@@ -390,12 +454,14 @@ def profile_from_arch(
       - G          = reduction throughput: HBM-bound 2-read-1-write streams
       - t_f, t_b   = 2ND and 4ND FLOPs over chip peak (fwd:bwd = 1:2)
 
-    ``compression`` (None | "int8" | "int8-fused") selects the wire layout
-    the job's ring actually uses, so Eq. (1) prices the compressed bytes;
-    ``message_overhead`` (seconds/ppermute, a few microseconds for an ICI
-    launch+ACK) is priced uniformly across layouts via
-    :func:`rar_ring_messages`, which is where the fused layout's halved
-    per-hop gamma becomes visible to the scheduler.
+    ``compression`` (one of :data:`WIRE_COMPRESSIONS`) selects the wire
+    layout the job's ring actually uses, so Eq. (1) prices the compressed
+    bytes; ``message_overhead`` (seconds/ppermute, a few microseconds for an
+    ICI launch+ACK) is priced uniformly across layouts via
+    :func:`rar_ring_messages`, which is where the fused layouts' halved
+    per-hop gamma becomes visible to the scheduler;
+    ``overlap_hidden_fraction`` is the bucketed-overlap discount (only the
+    exposed ``(1-h)`` slice of the collective term is priced).
     """
     flops_fwd = 2.0 * n_params * tokens_per_batch
     t_f_total = flops_fwd / chip_flops
@@ -413,6 +479,7 @@ def profile_from_arch(
         overhead=overhead,
         compression=compression,
         message_overhead=message_overhead,
+        overlap_hidden_fraction=overlap_hidden_fraction,
     )
 
 

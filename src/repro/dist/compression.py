@@ -62,7 +62,11 @@ from jax import lax
 
 from repro.dist.collectives import _all_gather_chunks, _as_chunks, _ring_perm
 from repro.kernels.quant_ring import (
+    FP8_DTYPE,
     SCALE_BYTES,  # noqa: F401  (re-export: the wire accounting's name for it)
+    bf16_accumulate_pallas,
+    bf16_add_cast_pallas,
+    cast_pack_bf16_pallas,
     dequant_accumulate_pallas,
     dequant_add_quantize_pallas,
     hop_message_layout,
@@ -114,17 +118,22 @@ def _interpret_default(interpret: Optional[bool]) -> bool:
 # ---------------------------------------------------------------------------
 
 def pack_hop_message(q: jax.Array, scales: jax.Array) -> jax.Array:
-    """Pack ``(n_blocks, block)`` int8 + ``(n_blocks,)`` f32 into one int8
-    wire buffer: payload first, then each scale bitcast to 4 int8 bytes."""
+    """Pack ``(n_blocks, block)`` quantized payload + ``(n_blocks,)`` f32
+    scales into one int8 wire buffer: payload first (fp8 payloads bitcast to
+    int8 bytes), then each scale bitcast to 4 int8 bytes."""
+    if q.dtype != jnp.int8:
+        q = lax.bitcast_convert_type(q, jnp.int8)
     trailer = lax.bitcast_convert_type(scales, jnp.int8).reshape(-1)
     return jnp.concatenate([q.reshape(-1), trailer])
 
 
-def unpack_hop_message(msg: jax.Array, n_blocks: int,
-                       block: int) -> Tuple[jax.Array, jax.Array]:
-    """Inverse of :func:`pack_hop_message`."""
+def unpack_hop_message(msg: jax.Array, n_blocks: int, block: int,
+                       wire_dtype=jnp.int8) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`pack_hop_message` for a given payload dtype."""
     n = n_blocks * block
     q = msg[:n].reshape(n_blocks, block)
+    if jnp.dtype(wire_dtype) != jnp.dtype(jnp.int8):
+        q = lax.bitcast_convert_type(q, wire_dtype)
     scales = lax.bitcast_convert_type(
         msg[n:].reshape(n_blocks, SCALE_BYTES), jnp.float32)
     return q, scales
@@ -211,12 +220,14 @@ def _xla_ring_all_reduce(x: jax.Array, axis_name: str,
 
 def _fused_ring_all_reduce(
     x: jax.Array, axis_name: str, *, block: int, interpret: bool,
-    first_hop: Optional[jax.Array] = None,
+    first_hop: Optional[jax.Array] = None, wire_dtype=jnp.int8,
 ) -> jax.Array:
     """Fused path: one packed ppermute per hop, Pallas quantize/accumulate.
 
     ``first_hop`` is an optional pre-packed wire message for the first
     Share-Reduce send (error feedback's already-quantized chunk).
+    ``wire_dtype`` selects the quantized payload element type (int8 or
+    float8_e4m3fn — both 1 byte/element, identical wire layout).
     """
     w = lax.axis_size(axis_name)
     idx = lax.axis_index(axis_name)
@@ -230,7 +241,8 @@ def _fused_ring_all_reduce(
     b = c_pad // nb
 
     def quant_pack(blocks2d: jax.Array) -> jax.Array:
-        q, scales = quantize_pack_pallas(blocks2d, interpret=interpret)
+        q, scales = quantize_pack_pallas(blocks2d, interpret=interpret,
+                                         wire_dtype=wire_dtype)
         return pack_hop_message(q, scales)
 
     # Share-Reduce: each hop receives ONE packed message, and the whole
@@ -247,7 +259,7 @@ def _fused_ring_all_reduce(
     for s in range(w - 1):
         recv = lax.ppermute(send, axis_name, perm)  # the hop's ONE collective
         local = jnp.take(chunks, (idx - s - 1) % w, axis=0)
-        q, scales = unpack_hop_message(recv, nb, b)
+        q, scales = unpack_hop_message(recv, nb, b, wire_dtype)
         if s < w - 2:
             q2, s2 = dequant_add_quantize_pallas(q, scales, local,
                                                  interpret=interpret)
@@ -274,6 +286,8 @@ def _fused_ring_all_reduce(
         send = recv
     stacked = jnp.stack(msgs)                       # (w, message)
     q_all = stacked[:, : nb * b].reshape(w * nb, b)
+    if jnp.dtype(wire_dtype) != jnp.dtype(jnp.int8):
+        q_all = lax.bitcast_convert_type(q_all, wire_dtype)
     scales_all = lax.bitcast_convert_type(
         stacked[:, nb * b:].reshape(w * nb, SCALE_BYTES), jnp.float32)
     deq = dequant_accumulate_pallas(q_all, scales_all, None,
@@ -285,6 +299,104 @@ def _fused_ring_all_reduce(
     if pad:
         flat = flat[: flat.size - pad]
     return flat.reshape(x.shape).astype(x.dtype)
+
+
+def _bf16_fused_ring_all_reduce(
+    x: jax.Array, axis_name: str, *, block: int, interpret: bool,
+) -> jax.Array:
+    """bf16 wire ring: one trailer-free bf16 ppermute per hop.
+
+    Same single-collective hop schedule as the fused int8/fp8 ring, but the
+    wire message is the bare 2-byte payload — bf16 keeps f32's exponent so
+    there are no scales to carry. Share-Reduce accumulates in f32 inside the
+    :func:`repro.kernels.quant_ring.bf16_add_cast_pallas` kernel; Share-Only
+    forwards received buffers verbatim and upcasts all gathered chunks in one
+    batched kernel, mirroring the int8 path.
+    """
+    w = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(w)
+    flat = x.reshape(-1).astype(jnp.float32)
+    c_pad, nb, pad = _fused_chunk_layout(flat.size, w, block)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    b = c_pad // nb
+    chunks = flat.reshape(w, nb, b)
+
+    def cast_pack(blocks2d: jax.Array) -> jax.Array:
+        return cast_pack_bf16_pallas(blocks2d, interpret=interpret).reshape(-1)
+
+    # Share-Reduce: each hop's ONE collective carries the bf16 payload; the
+    # send-critical path is the one-pass add-and-downcast kernel.
+    send = cast_pack(jnp.take(chunks, idx, axis=0))
+    reduced_own = None
+    for s in range(w - 1):
+        recv = lax.ppermute(send, axis_name, perm).reshape(nb, b)
+        local = jnp.take(chunks, (idx - s - 1) % w, axis=0)
+        if s < w - 2:
+            send = bf16_add_cast_pallas(recv, local,
+                                        interpret=interpret).reshape(-1)
+        else:
+            reduced_own = bf16_accumulate_pallas(recv, local,
+                                                 interpret=interpret)
+
+    # Share-Only: downcast the owned reduced chunk once, forward verbatim,
+    # upcast every gathered chunk in one batched kernel call.
+    own = (idx + 1) % w
+    send = cast_pack(reduced_own)
+    msgs = [send]
+    chunk_ids = [own]
+    for s in range(w - 1):
+        recv = lax.ppermute(send, axis_name, perm)
+        msgs.append(recv)
+        chunk_ids.append((idx - s) % w)
+        send = recv
+    stacked = jnp.stack(msgs).reshape(w * nb, b)    # (w, message) -> blocks
+    deq = bf16_accumulate_pallas(stacked, None, interpret=interpret)
+    out = jnp.zeros((w, nb, b), jnp.float32)
+    out = out.at[jnp.stack(chunk_ids)].set(deq.reshape(w, nb, b))
+
+    flat = out.reshape(-1)
+    if pad:
+        flat = flat[: flat.size - pad]
+    return flat.reshape(x.shape).astype(x.dtype)
+
+
+# wire-format name -> quantized payload dtype (None = trailer-free bf16)
+FUSED_WIRES = ("int8", "fp8", "bf16")
+_FUSED_WIRE_DTYPES = {"int8": jnp.int8, "fp8": FP8_DTYPE}
+
+
+def fused_wire_all_reduce(
+    x: jax.Array, axis_name: str, *, wire: str = "int8",
+    block: int = DEFAULT_BLOCK, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Single-ppermute-per-hop fused ring with a selectable wire format.
+
+    ``wire``:
+
+      * ``"int8"`` — the PR-5 layout: blockwise int8 payload + f32 scale
+        trailer (identical to ``compressed_ring_all_reduce(fused=True)``);
+      * ``"fp8"`` — float8_e4m3fn payload (bitcast to int8 bytes on the
+        wire) + the same per-block f32 scale trailer; byte-identical message
+        size to int8, tighter relative error for small in-block elements;
+      * ``"bf16"`` — trailer-free 2-byte bf16 payload, no scales.
+
+    All three issue ``2(w-1)`` collectives; per-hop message sizes are priced
+    by :func:`fused_wire_bytes` / ``rar_model.wire_formula``.
+    """
+    if wire not in FUSED_WIRES:
+        raise ValueError(f"unknown fused wire format {wire!r}; "
+                         f"expected one of {FUSED_WIRES}")
+    w = lax.axis_size(axis_name)
+    if w == 1:
+        return x
+    interp = _interpret_default(interpret)
+    if wire == "bf16":
+        return _bf16_fused_ring_all_reduce(x, axis_name, block=block,
+                                           interpret=interp)
+    return _fused_ring_all_reduce(x, axis_name, block=block, interpret=interp,
+                                  wire_dtype=_FUSED_WIRE_DTYPES[wire])
 
 
 # ---------------------------------------------------------------------------
@@ -396,3 +508,28 @@ def compressed_wire_bytes(d: float, w: int, *, scale_bytes: int = SCALE_BYTES,
         return 2.0 * (w - 1.0) * (c_pad + float(scale_bytes) * nb)
     c = -(-int(d) // w)  # ceil(d / w): the executed (padded) chunk size
     return 2.0 * (w - 1.0) * (float(c) + float(scale_bytes))
+
+
+def fused_wire_bytes(d: float, w: int, *, wire: str = "int8",
+                     scale_bytes: int = SCALE_BYTES,
+                     block: int = DEFAULT_BLOCK) -> float:
+    """Per-worker wire bytes of one :func:`fused_wire_all_reduce`.
+
+    All fused wires pay 2(w-1) hops of one message each. int8/fp8 messages
+    are the block-padded 1-byte payload plus one bitcast f32 scale per
+    sub-block; bf16 messages are the bare 2-byte payload (no trailer). The
+    scheduler-side mirror is ``rar_model.rar_compressed_bytes_per_worker``
+    with the matching ``payload_elem_bytes``/``trailer`` arguments — both
+    are asserted against traced collectives in tests/test_wire_cost.py.
+    """
+    if wire not in FUSED_WIRES:
+        raise ValueError(f"unknown fused wire format {wire!r}; "
+                         f"expected one of {FUSED_WIRES}")
+    if w <= 1:
+        return 0.0
+    c_pad, nb, _ = _fused_chunk_layout(int(d), w, block)
+    if wire == "bf16":
+        per_hop = 2.0 * c_pad
+    else:
+        per_hop = c_pad + float(scale_bytes) * nb
+    return 2.0 * (w - 1.0) * per_hop

@@ -15,11 +15,15 @@ Two registries:
     callables built per axis name, each annotated with the ``rar_model``
     wire layout it must price as (``compression``), the number of distinct
     ring directions its hops may use, and whether it is a half-split
-    bidirectional ring or a reduce-scatter (single phase).
+    bidirectional ring, a reduce-scatter (single phase), or a segmented
+    bucket pipeline (``n_buckets`` independent ppermute chains).
   * :data:`STEP_MODES` — the full ``make_ring_train_step`` modes
-    ``RingWorkerGroup`` accepts, annotated the same way. The step reduces
+    ``RingWorkerGroup`` accepts, annotated the same way. Most modes reduce
     *per gradient leaf* (plus one loss ``pmean``), so per-mode expectations
-    compose the per-leaf variant expectation over a model's leaf sizes.
+    compose the per-leaf variant expectation over a model's leaf sizes; the
+    overlap mode reduces *per bucket* (``spec.n_buckets``), so its
+    expectation composes over ``repro.dist.overlap.plan_bucket_sizes`` of
+    the leaf sizes instead.
 """
 
 from __future__ import annotations
@@ -36,7 +40,9 @@ from repro.dist import collectives
 from repro.dist.compression import (
     compressed_ring_all_reduce,
     ef_compressed_all_reduce,
+    fused_wire_all_reduce,
 )
+from repro.dist.overlap import even_bucket_sizes, segmented_ring_reduce
 
 __all__ = ["RingVariant", "StepModeSpec", "RING_VARIANTS", "STEP_MODES",
            "variant_by_name"]
@@ -54,9 +60,12 @@ class RingVariant:
     explicit ring. ``halves`` marks the bidirectional collective (the flat
     tensor splits into two half-rings, each priced independently);
     ``reduce_scatter`` marks the single-phase collective (Share-Reduce
-    only: half the hops and bytes of a full all-reduce). ``source`` is the
-    repo-relative file the variant's implementation lives in (verifier
-    findings point at it).
+    only: half the hops and bytes of a full all-reduce); ``n_buckets``
+    marks a segmented bucket pipeline — the flat input splits into that
+    many contiguous even segments (``overlap.even_bucket_sizes``), each
+    reduced by its own ppermute chain and priced independently. ``source``
+    is the repo-relative file the variant's implementation lives in
+    (verifier findings point at it).
     """
 
     name: str
@@ -66,10 +75,15 @@ class RingVariant:
     collective: str = "ppermute"
     halves: bool = False
     reduce_scatter: bool = False
+    n_buckets: Optional[int] = None
     source: str = "src/repro/dist/collectives.py"
 
-    def expected_messages(self, w: int) -> int:
-        """ppermute count one traced call must contain at world size w."""
+    def expected_messages(self, w: int, d: Optional[int] = None) -> int:
+        """ppermute count one traced call must contain at world size w.
+
+        ``d`` only matters for bucketed variants (the segment count is
+        clamped to the flat size).
+        """
         if self.collective != "ppermute" or w <= 1:
             return 0
         per_ring = wire_formula(self.compression).messages(w)
@@ -77,6 +91,10 @@ class RingVariant:
             return 2 * per_ring
         if self.reduce_scatter:
             return per_ring // 2
+        if self.n_buckets:
+            segs = (len(even_bucket_sizes(d, self.n_buckets))
+                    if d is not None else self.n_buckets)
+            return segs * per_ring
         return per_ring
 
     def expected_bytes(self, d: int, w: int) -> float:
@@ -89,6 +107,9 @@ class RingVariant:
             hi = (d + 1) // 2
             return (f.bytes_per_worker(hi, w)
                     + f.bytes_per_worker(d - hi, w))
+        if self.n_buckets:
+            return sum(f.bytes_per_worker(seg, w)
+                       for seg in even_bucket_sizes(d, self.n_buckets))
         total = f.bytes_per_worker(d, w)
         return total / 2.0 if self.reduce_scatter else total
 
@@ -99,6 +120,19 @@ def _ef_build(axis_name: str, *, fused: bool) -> Callable:
             g, jnp.zeros_like(g), axis_name, fused=fused, interpret=True)
         return reduced
     return run
+
+
+def _bucketed_f32_build(axis_name: str, *, n_buckets: int) -> Callable:
+    def run(g: jax.Array) -> jax.Array:
+        return segmented_ring_reduce(
+            g, partial(collectives.ring_all_reduce, axis_name=axis_name),
+            n_buckets)
+    return run
+
+
+# segment count of the registered variant-level bucket pipeline (the step
+# mode's bucket count lives on StepModeSpec.n_buckets instead)
+BUCKETED_VARIANT_SEGMENTS = 3
 
 
 RING_VARIANTS: Tuple[RingVariant, ...] = (
@@ -124,6 +158,11 @@ RING_VARIANTS: Tuple[RingVariant, ...] = (
         build=lambda ax: partial(collectives.psum_all_reduce, axis_name=ax),
         directions=0, collective="psum"),
     RingVariant(
+        name="f32-bucketed",
+        build=partial(_bucketed_f32_build, n_buckets=BUCKETED_VARIANT_SEGMENTS),
+        n_buckets=BUCKETED_VARIANT_SEGMENTS,
+        source="src/repro/dist/overlap.py"),
+    RingVariant(
         name="int8",
         build=lambda ax: partial(compressed_ring_all_reduce, axis_name=ax,
                                  interpret=True),
@@ -134,6 +173,18 @@ RING_VARIANTS: Tuple[RingVariant, ...] = (
         build=lambda ax: partial(compressed_ring_all_reduce, axis_name=ax,
                                  fused=True, interpret=True),
         compression="int8-fused",
+        source="src/repro/dist/compression.py"),
+    RingVariant(
+        name="bf16-fused",
+        build=lambda ax: partial(fused_wire_all_reduce, axis_name=ax,
+                                 wire="bf16", interpret=True),
+        compression="bf16-fused",
+        source="src/repro/dist/compression.py"),
+    RingVariant(
+        name="fp8-fused",
+        build=lambda ax: partial(fused_wire_all_reduce, axis_name=ax,
+                                 wire="fp8", interpret=True),
+        compression="fp8-fused",
         source="src/repro/dist/compression.py"),
     RingVariant(
         name="ef-int8",
@@ -163,7 +214,11 @@ class StepModeSpec:
     The step applies the mode's per-leaf reduction to every gradient leaf
     and one ``pmean`` to the scalar loss, so a traced step must show
     ``sum(leaf expectations) + 1 psum``. For ``collective == "psum"`` the
-    expectation is instead ``n_leaves + 1`` psums and no ppermutes.
+    expectation is instead ``n_leaves + 1`` psums and no ppermutes. A mode
+    with ``n_buckets`` set reduces *per bucket* instead of per leaf
+    (``overlap.bucketed_ring_reduce`` with the reverse-autodiff bucket
+    plan): the expectation composes the leaf variant over
+    ``plan_bucket_sizes(leaf_sizes, n_buckets, reverse=True)``.
     """
 
     mode: str
@@ -171,13 +226,36 @@ class StepModeSpec:
     directions: int = 1
     collective: str = "ppermute"
     halves: bool = False
+    n_buckets: Optional[int] = None
 
     def leaf_variant(self) -> RingVariant:
-        """The registered raw collective this mode applies per leaf."""
+        """The registered raw collective this mode applies per leaf (per
+        bucket for overlap modes)."""
         return variant_by_name({
             "ring": "f32", "bidir": "bidir", "psum": "psum",
             "compressed": "int8", "compressed-fused": "int8-fused",
+            "compressed-fused-overlap": "int8-fused",
+            "bf16-fused": "bf16-fused", "fp8-fused": "fp8-fused",
         }[self.mode])
+
+    @property
+    def wire_dtype(self) -> str:
+        """Wire payload element dtype name (part of the compiled-step cache
+        key: two modes sharing a dtype still differ by mode, but the dtype
+        is the recompile-relevant axis a wire-format change moves)."""
+        return {
+            None: "float32",
+            "int8": "int8",
+            "int8-fused": "int8",
+            "fp8-fused": "float8_e4m3fn",
+            "bf16-fused": "bfloat16",
+        }[self.compression]
+
+
+# default bucket count of the overlap step mode; the executed bucketing
+# clamps to the model's leaf count (overlap.plan_buckets), and the verifier
+# prices with the identical clamped plan
+DEFAULT_OVERLAP_BUCKETS = 4
 
 
 STEP_MODES: Dict[str, StepModeSpec] = {
@@ -187,4 +265,9 @@ STEP_MODES: Dict[str, StepModeSpec] = {
     "compressed": StepModeSpec(mode="compressed", compression="int8"),
     "compressed-fused": StepModeSpec(mode="compressed-fused",
                                      compression="int8-fused"),
+    "compressed-fused-overlap": StepModeSpec(
+        mode="compressed-fused-overlap", compression="int8-fused",
+        n_buckets=DEFAULT_OVERLAP_BUCKETS),
+    "bf16-fused": StepModeSpec(mode="bf16-fused", compression="bf16-fused"),
+    "fp8-fused": StepModeSpec(mode="fp8-fused", compression="fp8-fused"),
 }

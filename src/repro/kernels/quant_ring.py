@@ -1,9 +1,10 @@
 """Pallas kernels for the fused quantized-ring hop (``repro.dist.compression``).
 
-The compressed ring's hop payload is an int8 tensor plus its quantization
-scales. The XLA reference path computes one *global* amax scale per message
-and pays two ``ppermute`` collectives per hop (payload + f32 scale). These
-kernels implement the fused single-message layout instead:
+The compressed ring's hop payload is a narrow-dtype tensor plus (for the
+scaled formats) its quantization scales. The XLA reference path computes one
+*global* amax scale per message and pays two ``ppermute`` collectives per hop
+(payload + f32 scale). These kernels implement the fused single-message
+layout instead:
 
   * :func:`quantize_pack_pallas` — blockwise symmetric int8 quantization in
     one VMEM pass: each grid step loads a tile of ``block``-sized sub-block
@@ -34,6 +35,21 @@ schedule on. Tiles default to the largest divisor of ``n_blocks`` whose
 f32+int8 working set stays within ``_TILE_BUDGET_BYTES`` (a conservative
 slice of the ~16 MB VMEM, so in/out tiles double-buffer comfortably).
 
+Three wire dtypes share the pipeline:
+
+  * ``int8`` (default) — symmetric blockwise quantization, scale =
+    ``max|block| / 127``, values rounded to integers;
+  * ``float8_e4m3fn`` — same per-block f32 scales (scale =
+    ``max|block| / 448``) but the scaled values keep a 3-bit mantissa
+    instead of rounding to integers, so small elements within a block lose
+    far less relative precision. Same 1 byte/element payload and the same
+    f32-trailer message layout as int8 (``HopMessageLayout`` applies
+    unchanged: the caller bitcasts the fp8 payload to int8 for the wire);
+  * ``bfloat16`` — no scales at all (bf16 carries f32's exponent range):
+    :func:`cast_pack_bf16_pallas` / :func:`bf16_add_cast_pallas` /
+    :func:`bf16_accumulate_pallas` move 2 bytes/element with a trailer-free
+    hop message.
+
 Arrays are 2-D ``(n_blocks, block)``; the ring layer owns flattening,
 padding and the wire format (payload ++ scale trailer).
 """
@@ -47,7 +63,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-QMAX = 127.0  # symmetric int8 range
+QMAX = 127.0      # symmetric int8 range
+FP8_MAX = 448.0   # float8_e4m3fn finfo max (no inf: overflow saturates here)
+FP8_DTYPE = jnp.float8_e4m3fn
+
+
+def wire_qmax(wire_dtype) -> float:
+    """Symmetric clip range of a quantized wire dtype (scale denominator)."""
+    dt = jnp.dtype(wire_dtype)
+    if dt == jnp.dtype(jnp.int8):
+        return QMAX
+    if dt == jnp.dtype(FP8_DTYPE):
+        return FP8_MAX
+    raise ValueError(f"unsupported quantized wire dtype {dt}; "
+                     "expected int8 or float8_e4m3fn")
 
 # bytes each f32 scale occupies after the bitcast into the message trailer;
 # the kernels own this constant (the trailer is *their* output layout) and
@@ -118,48 +147,65 @@ def _rows_per_tile(nb: int, block: int, rows: Optional[int],
     return r
 
 
-def _quantize_pack_kernel(x_ref, q_ref, scale_ref):
-    """One tile: per-row amax -> scale, emit int8 payload + f32 scales."""
-    x = x_ref[...].astype(jnp.float32)
-    amax = jnp.max(jnp.abs(x), axis=-1)
-    scale = jnp.where(amax > 0, amax / QMAX, 1.0)
-    q_ref[...] = jnp.clip(jnp.round(x / scale[:, None]), -QMAX,
-                          QMAX).astype(jnp.int8)
-    scale_ref[...] = scale
+def _quantize_rows(y: jax.Array, qmax: float, wire_dtype):
+    """Per-row amax scale + quantized payload of a 2-D f32 tile.
+
+    Integer wire dtypes round to the nearest step; float wire dtypes (fp8)
+    keep the scaled value's mantissa and let the dtype cast do the rounding.
+    """
+    amax = jnp.max(jnp.abs(y), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    v = y / scale[:, None]
+    if jnp.issubdtype(jnp.dtype(wire_dtype), jnp.integer):
+        v = jnp.round(v)
+    return jnp.clip(v, -qmax, qmax).astype(wire_dtype), scale
+
+
+def _make_quantize_pack_kernel(qmax: float, wire_dtype):
+    def kernel(x_ref, q_ref, scale_ref):
+        """One tile: per-row amax -> scale, emit payload + f32 scales."""
+        q, scale = _quantize_rows(x_ref[...].astype(jnp.float32), qmax,
+                                  wire_dtype)
+        q_ref[...] = q
+        scale_ref[...] = scale
+    return kernel
 
 
 def quantize_pack_pallas(x: jax.Array, *, interpret: bool = False,
-                         rows_per_tile: Optional[int] = None):
-    """Blockwise symmetric int8 quantization of a ``(n_blocks, block)`` array.
+                         rows_per_tile: Optional[int] = None,
+                         wire_dtype=jnp.int8):
+    """Blockwise symmetric quantization of a ``(n_blocks, block)`` array.
 
-    Returns ``(q, scales)``: ``q`` is int8 with ``x``'s shape, ``scales`` is
-    f32 ``(n_blocks,)`` with ``scales[i] = max|x[i]| / 127`` (1.0 for
-    all-zero sub-blocks, so dequantization is well defined). Error bound per
-    element: ``scales[i] / 2``.
+    Returns ``(q, scales)``: ``q`` has ``x``'s shape in ``wire_dtype`` (int8
+    or float8_e4m3fn), ``scales`` is f32 ``(n_blocks,)`` with
+    ``scales[i] = max|x[i]| / qmax`` (1.0 for all-zero sub-blocks, so
+    dequantization is well defined). Error bound per element: ``scales[i]/2``
+    for int8; relative ~2^-3 within the block for fp8.
     """
+    qmax = wire_qmax(wire_dtype)
     nb, block = x.shape
     rows = _rows_per_tile(nb, block, rows_per_tile, bytes_per_elem=5)
     return pl.pallas_call(
-        _quantize_pack_kernel,
+        _make_quantize_pack_kernel(qmax, wire_dtype),
         grid=(nb // rows,),
         in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
                    pl.BlockSpec((rows,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.dtype(wire_dtype)),
                    jax.ShapeDtypeStruct((nb,), jnp.float32)],
         interpret=interpret,
     )(x)
 
 
-def _dequant_add_quantize_kernel(q_ref, scale_ref, acc_ref, q_out, s_out):
-    """One tile of the steady-state hop: requantize(acc + q * scale)."""
-    y = (acc_ref[...].astype(jnp.float32)
-         + q_ref[...].astype(jnp.float32) * scale_ref[...][:, None])
-    amax = jnp.max(jnp.abs(y), axis=-1)
-    scale = jnp.where(amax > 0, amax / QMAX, 1.0)
-    q_out[...] = jnp.clip(jnp.round(y / scale[:, None]), -QMAX,
-                          QMAX).astype(jnp.int8)
-    s_out[...] = scale
+def _make_dequant_add_quantize_kernel(qmax: float, wire_dtype):
+    def kernel(q_ref, scale_ref, acc_ref, q_out, s_out):
+        """One tile of the steady-state hop: requantize(acc + q * scale)."""
+        y = (acc_ref[...].astype(jnp.float32)
+             + q_ref[...].astype(jnp.float32) * scale_ref[...][:, None])
+        q, scale = _quantize_rows(y, qmax, wire_dtype)
+        q_out[...] = q
+        s_out[...] = scale
+    return kernel
 
 
 def dequant_add_quantize_pallas(q: jax.Array, scales: jax.Array,
@@ -168,19 +214,21 @@ def dequant_add_quantize_pallas(q: jax.Array, scales: jax.Array,
     """The fused ring's intermediate hop: ``Q(acc + dequant(q, scales))``.
 
     One VMEM pass per sub-block row — the f32 partial sum is never
-    materialized in HBM. Returns ``(q', scales')`` for the next hop's wire
-    message.
+    materialized in HBM. The wire dtype (int8 or fp8) is inherited from
+    ``q``. Returns ``(q', scales')`` for the next hop's wire message.
     """
+    wire_dtype = q.dtype
+    qmax = wire_qmax(wire_dtype)
     nb, block = q.shape
     rows = _rows_per_tile(nb, block, rows_per_tile, bytes_per_elem=6)
     payload_spec = pl.BlockSpec((rows, block), lambda i: (i, 0))
     scale_spec = pl.BlockSpec((rows,), lambda i: (i,))
     return pl.pallas_call(
-        _dequant_add_quantize_kernel,
+        _make_dequant_add_quantize_kernel(qmax, wire_dtype),
         grid=(nb // rows,),
         in_specs=[payload_spec, scale_spec, payload_spec],
         out_specs=[payload_spec, scale_spec],
-        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+        out_shape=[jax.ShapeDtypeStruct((nb, block), wire_dtype),
                    jax.ShapeDtypeStruct((nb,), jnp.float32)],
         interpret=interpret,
     )(q, scales, acc)
@@ -232,3 +280,98 @@ def dequant_accumulate_pallas(q: jax.Array, scales: jax.Array,
         out_shape=out_shape,
         interpret=interpret,
     )(q, scales, acc)
+
+
+# ---------------------------------------------------------------------------
+# bf16 wire format: trailer-free 2-byte payload (no scales)
+# ---------------------------------------------------------------------------
+
+def _cast_bf16_kernel(x_ref, out_ref):
+    """One tile: round-to-nearest bf16 cast (the bf16 wire's 'quantize')."""
+    out_ref[...] = x_ref[...].astype(jnp.float32).astype(jnp.bfloat16)
+
+
+def cast_pack_bf16_pallas(x: jax.Array, *, interpret: bool = False,
+                          rows_per_tile: Optional[int] = None) -> jax.Array:
+    """bf16 wire payload of a ``(n_blocks, block)`` array — the bf16 ring's
+    analogue of :func:`quantize_pack_pallas`, minus the scales (bf16 keeps
+    f32's exponent, so no per-block normalization is needed and the hop
+    message is the bare payload)."""
+    nb, block = x.shape
+    rows = _rows_per_tile(nb, block, rows_per_tile, bytes_per_elem=6)
+    spec = pl.BlockSpec((rows, block), lambda i: (i, 0))
+    return pl.pallas_call(
+        _cast_bf16_kernel,
+        grid=(nb // rows,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.bfloat16),
+        interpret=interpret,
+    )(x)
+
+
+def _bf16_add_cast_kernel(recv_ref, acc_ref, out_ref):
+    """One tile of the steady-state bf16 hop: bf16(acc + recv)."""
+    y = (acc_ref[...].astype(jnp.float32)
+         + recv_ref[...].astype(jnp.float32))
+    out_ref[...] = y.astype(jnp.bfloat16)
+
+
+def bf16_add_cast_pallas(recv: jax.Array, acc: jax.Array, *,
+                         interpret: bool = False,
+                         rows_per_tile: Optional[int] = None) -> jax.Array:
+    """The bf16 ring's intermediate hop: accumulate in f32 inside VMEM, emit
+    the next hop's bf16 payload — one pass, no HBM f32 intermediate."""
+    nb, block = recv.shape
+    rows = _rows_per_tile(nb, block, rows_per_tile, bytes_per_elem=8)
+    spec = pl.BlockSpec((rows, block), lambda i: (i, 0))
+    return pl.pallas_call(
+        _bf16_add_cast_kernel,
+        grid=(nb // rows,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.bfloat16),
+        interpret=interpret,
+    )(recv, acc)
+
+
+def _bf16_accumulate_kernel(recv_ref, acc_ref, out_ref):
+    """One tile: out = acc + recv in f32."""
+    out_ref[...] = (acc_ref[...].astype(jnp.float32)
+                    + recv_ref[...].astype(jnp.float32))
+
+
+def _bf16_upcast_kernel(recv_ref, out_ref):
+    """One tile: out = f32(recv) (Share-Only unpack, no accumulator)."""
+    out_ref[...] = recv_ref[...].astype(jnp.float32)
+
+
+def bf16_accumulate_pallas(recv: jax.Array,
+                           acc: Optional[jax.Array] = None, *,
+                           interpret: bool = False,
+                           rows_per_tile: Optional[int] = None) -> jax.Array:
+    """f32 upcast(+accumulate) of a ``(n_blocks, block)`` bf16 payload —
+    the bf16 analogue of :func:`dequant_accumulate_pallas` (``acc=None``
+    returns the plain upcast)."""
+    nb, block = recv.shape
+    rows = _rows_per_tile(nb, block, rows_per_tile,
+                          bytes_per_elem=10 if acc is not None else 6)
+    spec = pl.BlockSpec((rows, block), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((nb, block), jnp.float32)
+    if acc is None:
+        return pl.pallas_call(
+            _bf16_upcast_kernel,
+            grid=(nb // rows,),
+            in_specs=[spec],
+            out_specs=spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(recv)
+    return pl.pallas_call(
+        _bf16_accumulate_kernel,
+        grid=(nb // rows,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(recv, acc)

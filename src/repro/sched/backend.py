@@ -311,21 +311,23 @@ class LiveBackend:
 
         ``fit_comm_model`` fits the f32 ring's slope (wire bytes linear in
         d(w-1)/w). A compressed-ring job puts ~4x fewer bytes on the wire
-        for the same d, so its measured timings must be fit at the byte
-        count it actually sends — otherwise the refit inflates bandwidth
-        ~4x and Eq. (1) then divides the already-compressed byte count by
-        it, double-counting the saving.
+        for the same d (~2x for the bf16 wire), so its measured timings
+        must be fit at the byte count it actually sends — otherwise the
+        refit inflates bandwidth and Eq. (1) then divides the
+        already-compressed byte count by it, double-counting the saving.
+        ``wire_formula`` dispatches every registered layout (int8,
+        int8-fused, bf16-fused, fp8-fused), so a new wire format prices
+        here without touching the backend.
         """
         if not compression:
             return float(d)
         from repro.core.rar_model import (
-            rar_compressed_bytes_per_worker,
             rar_ring_bytes_per_worker,
+            wire_formula,
         )
 
         return float(d) * (
-            rar_compressed_bytes_per_worker(
-                d, w, fused=compression == "int8-fused")
+            wire_formula(compression).bytes_per_worker(d, w)
             / rar_ring_bytes_per_worker(d, w, elem_bytes=4))
 
     def _record_timings(self, job_id: int, trainer,

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.dist.registry import STEP_MODES
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
 from repro.training.optimizer import Optimizer
 from repro.training.train_step import make_ring_train_step
@@ -92,52 +93,68 @@ class _RingProgram:
 class RingWorkerGroup:
     """Mesh + compiled-step cache for one job's elastic ring.
 
-    The cache is keyed by ``(workers, mode)``; ``compile_count`` counts cache
-    misses (each miss builds a fresh ``jax.jit(jax.shard_map(...))`` — the
-    expensive trace/compile path), so equal-sized back-to-back slots can be
-    asserted to reuse the executable. ``mode`` is any
-    :func:`~repro.training.train_step.make_ring_train_step` ring mode,
-    including ``"compressed"`` (int8 ring) and ``"compressed-fused"`` (the
-    Pallas single-ppermute hop pipeline of :mod:`repro.dist.compression`).
+    The cache is keyed by ``(workers, mode, n_buckets, wire_dtype)``;
+    ``compile_count`` counts cache misses (each miss builds a fresh
+    ``jax.jit(jax.shard_map(...))`` — the expensive trace/compile path), so
+    equal-sized back-to-back slots can be asserted to reuse the executable.
+    ``mode`` is any :func:`~repro.training.train_step.make_ring_train_step`
+    ring mode, including ``"compressed-fused"`` (the Pallas single-ppermute
+    hop pipeline of :mod:`repro.dist.compression`), its ``"bf16-fused"`` /
+    ``"fp8-fused"`` wire-format siblings, and
+    ``"compressed-fused-overlap"`` (per-bucket rings in reverse-autodiff
+    order; ``n_buckets`` overrides the registry default bucket count).
     """
 
     # attributes make_ring_train_step closes over at _program build time:
     # they are part of the compiled step's semantics but NOT part of the
-    # (workers, mode) cache key, so they must never change after __init__ —
-    # a mutation would silently serve stale compiled steps (or, if jit
-    # retraced on it, turn the cache into per-slot recompiles). The static
-    # verifier (repro.analysis.collectives) checks by AST that no method
-    # other than __init__ assigns them, and audit_compiled_step_cache
-    # cross-checks the live fingerprint per slot.
-    STATIC_CLOSURE_ATTRS = ("model", "optimizer", "global_batch", "lr")
+    # (workers, mode, n_buckets, wire_dtype) cache key, so they must never
+    # change after __init__ — a mutation would silently serve stale compiled
+    # steps (or, if jit retraced on it, turn the cache into per-slot
+    # recompiles). The static verifier (repro.analysis.collectives) checks
+    # by AST that no method other than __init__ assigns them, and
+    # audit_compiled_step_cache cross-checks the live fingerprint per slot.
+    STATIC_CLOSURE_ATTRS = ("model", "optimizer", "global_batch", "lr",
+                            "n_buckets", "wire_dtype")
 
     def __init__(self, model, optimizer: Optimizer, *, global_batch: int,
-                 lr: float, mode: str = "ring"):
+                 lr: float, mode: str = "ring",
+                 n_buckets: Optional[int] = None):
         self.model = model
         self.optimizer = optimizer
         self.global_batch = global_batch
         self.lr = lr
         self.mode = mode
+        spec = STEP_MODES.get(mode)
+        # resolved bucket count (None for non-overlap modes) and wire payload
+        # dtype: both change the traced collectives, so both sit in the
+        # cache key alongside mode
+        self.n_buckets = (spec.n_buckets if spec is not None else None) \
+            if n_buckets is None else int(n_buckets)
+        self.wire_dtype = spec.wire_dtype if spec is not None else "float32"
         self.workers = 0                 # current ring size (0 = unformed)
         self.compile_count = 0           # compiled-step cache misses
-        self._programs: Dict[Tuple[int, str], _RingProgram] = {}
+        self._programs: Dict[Tuple[int, str, Optional[int], str],
+                             _RingProgram] = {}
         self._warm: set = set()          # keys whose step_fn has run >= once
         self._closure_fingerprint = self.closure_fingerprint()
 
-    def cache_key(self, workers: int) -> Tuple[int, str]:
+    def cache_key(self, workers: int) -> Tuple[int, str, Optional[int], str]:
         """The compiled-step cache key for a (clamped) ring size.
 
         Everything else the jitted step depends on is closure state fixed at
-        construction (``STATIC_CLOSURE_ATTRS``), so ``(workers, mode)``
-        uniquely identifies an executable — the invariant
-        ``repro.sched.backend.audit_compiled_step_cache`` verifies.
+        construction (``STATIC_CLOSURE_ATTRS``), so
+        ``(workers, mode, n_buckets, wire_dtype)`` uniquely identifies an
+        executable — the invariant
+        ``repro.sched.backend.audit_compiled_step_cache`` verifies. The
+        first element stays the worker count (the audit relies on it).
         """
-        return (int(workers), self.mode)
+        return (int(workers), self.mode, self.n_buckets, self.wire_dtype)
 
     def closure_fingerprint(self) -> Tuple:
         """Identity snapshot of the closed-over static attrs (audit hook)."""
         return (id(self.model), id(self.optimizer),
-                int(self.global_batch), float(self.lr))
+                int(self.global_batch), float(self.lr),
+                self.n_buckets, self.wire_dtype)
 
     # -- ring formation -----------------------------------------------------
     def resolve_workers(self, requested: int) -> int:
@@ -170,8 +187,11 @@ class RingWorkerGroup:
         prog = self._programs.get(key)
         if prog is None:
             mesh = Mesh(np.array(jax.devices()[:w]), ("data",))
-            step_fn = make_ring_train_step(self.model, self.optimizer, "data",
-                                           lr=self.lr, mode=self.mode)
+            step_fn = make_ring_train_step(
+                self.model, self.optimizer, "data", lr=self.lr,
+                mode=self.mode,
+                n_buckets=self.n_buckets
+                if self.mode == "compressed-fused-overlap" else None)
             smapped = jax.jit(jax.shard_map(
                 step_fn, mesh=mesh,
                 in_specs=(P(), P(), P("data")),
@@ -224,7 +244,8 @@ class ElasticTrainer:
 
     def __init__(self, model, optimizer: Optimizer, data, *,
                  global_batch: int, base_lr: float = 1e-3,
-                 mode: str = "ring", checkpoint_dir: Optional[str] = None):
+                 mode: str = "ring", checkpoint_dir: Optional[str] = None,
+                 n_buckets: Optional[int] = None):
         self.model = model
         self.optimizer = optimizer
         self.data = data
@@ -235,7 +256,8 @@ class ElasticTrainer:
         self.group = RingWorkerGroup(model, optimizer,
                                      global_batch=global_batch,
                                      lr=base_lr,  # fixed global batch =>
-                                     mode=mode)   # fixed LR (w splits only)
+                                     mode=mode,   # fixed LR (w splits only)
+                                     n_buckets=n_buckets)
         self.params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
         self.opt_state = optimizer.init(self.params)
         self.step = 0

@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import collectives
-from repro.dist.compression import ef_compressed_all_reduce
-from repro.dist.overlap import microbatch_grads
+from repro.dist.compression import ef_compressed_all_reduce, fused_wire_all_reduce
+from repro.dist.overlap import bucketed_ring_reduce, microbatch_grads
 from repro.dist.registry import STEP_MODES
 from repro.training.optimizer import Optimizer
 
@@ -55,15 +55,22 @@ def make_train_step(model, optimizer: Optimizer, *, lr: float = 3e-4,
 
 def make_ring_train_step(model, optimizer: Optimizer, axis_name: str, *,
                          lr: float = 3e-4, mode: str = "ring",
-                         error_feedback: bool = False) -> Callable:
+                         error_feedback: bool = False,
+                         n_buckets: Optional[int] = None) -> Callable:
     """Explicit-DP step for shard_map: local grads -> RAR ring -> update.
 
     mode: "ring" (paper-faithful), "bidir" (counter-rotating rings),
     "psum" (XLA-native), "compressed" (int8 ring, XLA reference: two
     ppermutes per hop), "compressed-fused" (the Pallas single-ppermute hop
     pipeline — blockwise scales packed into the payload trailer, fused
-    dequant-accumulate on receive; see repro.dist.compression). Both
-    compressed modes pair with error_feedback.
+    dequant-accumulate on receive; see repro.dist.compression),
+    "bf16-fused" / "fp8-fused" (same pipeline with a bfloat16 / float8_e4m3
+    wire payload), "compressed-fused-overlap" (the int8-fused pipeline
+    applied per *bucket* instead of per leaf: reverse-autodiff-ordered
+    buckets, one ppermute chain each — see repro.dist.overlap.
+    bucketed_ring_reduce; ``n_buckets`` overrides the registry default).
+    Both int8 compressed modes pair with error_feedback; the bf16/fp8/
+    overlap modes do not (ValueError).
     Signature: (params, opt_state, local_batch[, ef_state])
              -> (params, opt_state, metrics[, ef_state]).
     Batch-mean semantics: local grads averaged by world size after reduce.
@@ -72,9 +79,31 @@ def make_ring_train_step(model, optimizer: Optimizer, axis_name: str, *,
         raise ValueError(f"unknown ring mode {mode!r}; registered modes: "
                          f"{RING_STEP_MODES}")
     fused = mode == "compressed-fused"
+    wire = {"bf16-fused": "bf16", "fp8-fused": "fp8"}.get(mode)
+    overlap = mode == "compressed-fused-overlap"
+    if error_feedback and (wire or overlap):
+        raise ValueError(
+            f"mode {mode!r} does not support error_feedback: residual "
+            "tracking is only wired for the per-leaf int8 rings "
+            "(\"compressed\" / \"compressed-fused\")")
+    if n_buckets is not None and not overlap:
+        raise ValueError(f"n_buckets is only meaningful for "
+                         f"\"compressed-fused-overlap\", got mode {mode!r}")
+    if overlap:
+        n_buckets = (STEP_MODES[mode].n_buckets if n_buckets is None
+                     else int(n_buckets))
 
     def reduce_tree(grads, ef_state):
         w = jax.lax.axis_size(axis_name)
+        if wire is not None:
+            return jax.tree.map(
+                lambda g: fused_wire_all_reduce(g, axis_name, wire=wire) / w,
+                grads), ef_state
+        if overlap:
+            summed = bucketed_ring_reduce(grads, axis_name,
+                                          variant="int8-fused",
+                                          n_buckets=n_buckets)
+            return jax.tree.map(lambda g: g / w, summed), ef_state
         if mode in ("compressed", "compressed-fused"):
             if error_feedback and ef_state is not None:
                 pairs = jax.tree.map(

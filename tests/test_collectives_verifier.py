@@ -129,6 +129,39 @@ def test_trailer_mismatch_fails_pricing():
                for f in findings), findings
 
 
+def test_fp8_trailer_mismatch_fails_pricing():
+    """The short-trailer defect must also fire under fp8 pricing — fp8
+    shares the int8 message layout (1 B payload + bitcast f32 trailer)."""
+    broken = [v for v, _ in fix.broken_ring_variants()
+              if v.name == "broken-fp8-trailer-mismatch"][0]
+    findings = coll.verify_ring_variant(broken, [4], [777])
+    assert any(f.check == "pricing" and "fp8-fused" in f.message
+               for f in findings), findings
+
+
+def test_bucket_missing_segment_fails_pricing():
+    """A bucket pipeline that rings only 2 of its 3 declared segments must
+    fail pricing on message count (a silently-unreduced bucket)."""
+    broken = [v for v, _ in fix.broken_ring_variants()
+              if v.name == "broken-bucket-missing-segment"][0]
+    findings = coll.verify_ring_variant(broken, [4], [777])
+    pricing = [f for f in findings if f.check == "pricing"]
+    assert any("gamma accounting" in f.message for f in pricing), findings
+
+
+def test_bucket_shared_chain_fails_pricing_on_messages_only():
+    """Three declared buckets funneled through ONE ppermute chain carry the
+    same total bytes as the per-segment plan — only the per-message gamma
+    accounting catches the shared chain."""
+    broken = [v for v, _ in fix.broken_ring_variants()
+              if v.name == "broken-bucket-shared-chain"][0]
+    findings = coll.verify_ring_variant(broken, [4], [777])
+    pricing = [f for f in findings if f.check == "pricing"]
+    assert any("gamma accounting" in f.message for f in pricing), findings
+    # the byte totals coincide by construction: no byte-drift finding
+    assert not any("payloads total" in f.message for f in pricing), findings
+
+
 def test_weak_type_fails_recompile_hazard():
     findings = coll.weak_type_findings(fix.weak_typed_template(), "fixture")
     assert len(findings) == 1
@@ -195,9 +228,11 @@ def test_bidir_w2_forward_reverse_coincide():
 # pricing agreement with rar_model / quant_ring
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("compression", [None, "int8", "int8-fused"])
+@pytest.mark.parametrize("compression", [None, "int8", "int8-fused",
+                                         "bf16-fused", "fp8-fused"])
 def test_variant_expectations_match_wire_formula(compression):
-    name = {None: "f32", "int8": "int8", "int8-fused": "int8-fused"}
+    name = {None: "f32", "int8": "int8", "int8-fused": "int8-fused",
+            "bf16-fused": "bf16-fused", "fp8-fused": "fp8-fused"}
     variant = variant_by_name(name[compression])
     formula = wire_formula(compression)
     for w in WORLDS:
@@ -300,7 +335,7 @@ def test_compiled_step_cache_hits_on_same_key():
     group._program(1)
     group._program(1)
     assert group.compile_count == 1
-    assert group.cache_key(1) == (1, "ring")
+    assert group.cache_key(1) == (1, "ring", None, "float32")
 
 
 def test_step_templates_have_no_weak_types():
@@ -319,12 +354,12 @@ def test_cli_exit_zero_on_repo(tmp_path, capsys):
                     "--json", str(out_json)])
     captured = capsys.readouterr().out
     assert rc == 0, captured
-    assert "9 variant(s) + 5 step mode(s)" in captured
+    assert "12 variant(s) + 8 step mode(s)" in captured
     data = json.loads(out_json.read_text())
     assert data["tool"] == "repro.analysis.collectives"
     assert data["findings"] == []
     assert data["self_test_failures"] == []
-    assert data["stats"]["jaxprs"] >= 9 * 3 * 2  # variants x worlds x ds
+    assert data["stats"]["jaxprs"] >= 12 * 3 * 2  # variants x worlds x ds
 
 
 def test_cli_json_schema_matches_lint(tmp_path):

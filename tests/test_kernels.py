@@ -285,3 +285,94 @@ def test_quant_ring_ops_wrappers_run():
     deq = ops.dequant_accumulate(q, s)
     np.testing.assert_allclose(np.asarray(out) - np.asarray(deq),
                                np.asarray(x), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quant ring: fp8 + bf16 wire-format kernels
+# ---------------------------------------------------------------------------
+
+def test_quantize_pack_fp8_wire():
+    """fp8 payloads: same blockwise scale rule (amax -> FP8_MAX), dtype cast
+    does the rounding (no integer round), dequant bounded by the e4m3
+    mantissa budget."""
+    from repro.kernels.quant_ring import FP8_DTYPE, FP8_MAX
+
+    x = rand(jax.random.PRNGKey(4), (6, 256), scale=3.0)
+    q, s = quantize_pack_pallas(x, interpret=True, wire_dtype=FP8_DTYPE)
+    assert q.dtype == FP8_DTYPE and s.shape == (6,)
+    amax = np.abs(np.asarray(x)).max(axis=1)
+    np.testing.assert_allclose(np.asarray(s), amax / FP8_MAX, rtol=1e-6)
+    back = np.asarray(q, np.float32) * np.asarray(s)[:, None]
+    # e4m3: 3-bit mantissa -> relative half-step 2^-4 per element
+    err = np.abs(back - np.asarray(x))
+    assert (err <= np.abs(np.asarray(x)) * 2.0 ** -4 + 1e-6).all()
+
+
+def test_fp8_dequant_add_quantize_composition():
+    """The fp8 one-pass hop == quantize_pack(dequant_accumulate(...)) with
+    the wire dtype inherited from the payload."""
+    from repro.kernels.quant_ring import FP8_DTYPE
+
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = rand(keys[0], (8, 128), scale=2.0)
+    acc = rand(keys[1], (8, 128), scale=2.0)
+    q, s = quantize_pack_pallas(x, interpret=True, wire_dtype=FP8_DTYPE)
+    q1, s1 = dequant_add_quantize_pallas(q, s, acc, interpret=True)
+    assert q1.dtype == FP8_DTYPE
+    two_pass = dequant_accumulate_pallas(q, s, acc, interpret=True)
+    q2, s2 = quantize_pack_pallas(two_pass, interpret=True,
+                                  wire_dtype=FP8_DTYPE)
+    np.testing.assert_array_equal(np.asarray(q1, np.float32),
+                                  np.asarray(q2, np.float32))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_fp8_all_zero_blocks_well_defined():
+    from repro.kernels.quant_ring import FP8_DTYPE
+
+    x = jnp.zeros((3, 128), jnp.float32).at[1].set(2.0)
+    q, s = quantize_pack_pallas(x, interpret=True, wire_dtype=FP8_DTYPE)
+    assert np.asarray(s)[0] == 1.0 and np.asarray(s)[2] == 1.0
+    back = dequant_accumulate_pallas(q, s, None, interpret=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-7)
+
+
+def test_wire_qmax_rejects_unquantized_dtypes():
+    from repro.kernels.quant_ring import FP8_DTYPE, wire_qmax
+
+    assert wire_qmax(jnp.int8) == 127.0
+    assert wire_qmax(FP8_DTYPE) == 448.0
+    with pytest.raises(ValueError, match="unsupported quantized wire"):
+        wire_qmax(jnp.bfloat16)
+
+
+def test_bf16_cast_pack_and_accumulate_match_jnp():
+    from repro.kernels.quant_ring import (
+        bf16_accumulate_pallas,
+        bf16_add_cast_pallas,
+        cast_pack_bf16_pallas,
+    )
+
+    keys = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = rand(keys[0], (5, 384), scale=4.0)
+    acc = rand(keys[1], (5, 384), scale=4.0)
+    wire = cast_pack_bf16_pallas(x, interpret=True)
+    assert wire.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(wire, np.float32),
+                                  np.asarray(x.astype(jnp.bfloat16),
+                                             np.float32))
+    # steady-state hop: f32 accumulate in VMEM, bf16 back out
+    hop = bf16_add_cast_pallas(wire, acc, interpret=True)
+    ref = (acc.astype(jnp.float32)
+           + wire.astype(jnp.float32)).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(hop, np.float32),
+                                  np.asarray(ref, np.float32))
+    # final accumulate -> f32; acc=None is a plain upcast
+    out = bf16_accumulate_pallas(wire, acc, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(acc.astype(jnp.float32) + wire.astype(jnp.float32)),
+        rtol=1e-6)
+    up = bf16_accumulate_pallas(wire, None, interpret=True)
+    np.testing.assert_array_equal(np.asarray(up),
+                                  np.asarray(wire, np.float32))

@@ -224,3 +224,109 @@ def test_message_overhead_priced_uniformly_across_layouts():
     # message count: fused < int8 < f32
     assert float(fused.iteration_time(w)) < float(xla.iteration_time(w))
     assert float(xla.iteration_time(w)) < float(f32.iteration_time(w))
+
+
+# ---------------------------------------------------------------------------
+# overlap discount + bf16/fp8 wire layouts
+# ---------------------------------------------------------------------------
+
+_EQ1_KW = dict(d=1e7, bandwidth=1e8, reduce_speed=1e9, t_fwd_per_sample=1e-4,
+               t_bwd=1e-3, batch_size=32, overhead=1e-5,
+               message_overhead=5e-6)
+
+
+@pytest.mark.parametrize("compression",
+                         [None, "int8", "int8-fused", "bf16-fused",
+                          "fp8-fused"])
+def test_overlap_zero_bit_identical(compression):
+    """h=0 must not perturb Eq. (1) at all — same float, not just close."""
+    from repro.core.rar_model import effective_iteration_time
+
+    for w in (1, 2, 8, 33):
+        base = rar_iteration_time(w, compression=compression, **_EQ1_KW)
+        assert rar_iteration_time(w, compression=compression,
+                                  overlap_hidden_fraction=0.0,
+                                  **_EQ1_KW) == base
+    p = profile_from_arch(n_params=1e9, tokens_per_batch=4096,
+                          compression=compression)
+    bw = p.bandwidth / 2.0
+    assert float(effective_iteration_time(p, bw, 8,
+                                          overlap_hidden_fraction=0.0)) == \
+        float(effective_iteration_time(p, bw, 8))
+
+
+def test_overlap_hidden_fraction_validated():
+    for bad in (-0.1, 1.0001, float("nan")):
+        with pytest.raises(ValueError, match="overlap_hidden_fraction"):
+            rar_iteration_time(4, overlap_hidden_fraction=bad, **_EQ1_KW)
+    with pytest.raises(ValueError, match="overlap_hidden_fraction"):
+        profile_from_arch(n_params=1e8, tokens_per_batch=4096,
+                          overlap_hidden_fraction=2.0).iteration_time(4)
+
+
+def test_overlap_discounts_exposed_comm_only():
+    """tau(h) = compute + overhead + (1-h) * comm, with comm including the
+    per-message gamma slice — the discount lands after message_overhead."""
+    w = 8
+    base = rar_iteration_time(w, compression="int8-fused", **_EQ1_KW)
+    compute_only = rar_iteration_time(1, compression="int8-fused", **_EQ1_KW)
+    comm = base - compute_only
+    for h in (0.25, 0.5, 1.0):
+        tau = rar_iteration_time(w, compression="int8-fused",
+                                 overlap_hidden_fraction=h, **_EQ1_KW)
+        assert tau == pytest.approx(compute_only + (1.0 - h) * comm,
+                                    rel=1e-12)
+    # fully hidden comm degenerates to the single-worker compute time
+    assert rar_iteration_time(w, compression="int8-fused",
+                              overlap_hidden_fraction=1.0, **_EQ1_KW) == \
+        pytest.approx(compute_only, rel=1e-12)
+
+
+def test_profile_overlap_passthrough():
+    """RarJobProfile.overlap_hidden_fraction flows into iteration_time and
+    effective_iteration_time, and the kwarg overrides the profile field."""
+    from repro.core.rar_model import effective_iteration_time
+
+    kw = dict(n_params=1e9, tokens_per_batch=4096, compression="int8-fused")
+    serial = profile_from_arch(**kw)
+    overlapped = profile_from_arch(**kw, overlap_hidden_fraction=0.6)
+    assert overlapped.overlap_hidden_fraction == 0.6
+    w = 8
+    assert float(overlapped.iteration_time(w)) == pytest.approx(
+        float(rar_iteration_time(
+            w, d=serial.d, bandwidth=serial.bandwidth,
+            reduce_speed=serial.reduce_speed,
+            t_fwd_per_sample=serial.t_fwd_per_sample, t_bwd=serial.t_bwd,
+            batch_size=serial.batch_size, overhead=serial.overhead,
+            compression="int8-fused", message_overhead=serial.message_overhead,
+            overlap_hidden_fraction=0.6)), rel=1e-12)
+    bw = serial.bandwidth / 2.0
+    assert float(effective_iteration_time(overlapped, bw, w)) < float(
+        effective_iteration_time(serial, bw, w))
+    # kwarg override beats the profile field
+    assert float(effective_iteration_time(overlapped, bw, w,
+                                          overlap_hidden_fraction=0.0)) == \
+        float(effective_iteration_time(serial, bw, w))
+
+
+def test_new_wire_layout_formulas():
+    """fp8 shares the int8-fused message layout exactly; bf16 ships a bare
+    2-byte payload with no scale trailer."""
+    from repro.core.rar_model import wire_formula
+    from repro.kernels.quant_ring import hop_message_layout
+
+    d, w = 1 << 20, 8
+    int8 = wire_formula("int8-fused")
+    fp8 = wire_formula("fp8-fused")
+    bf16 = wire_formula("bf16-fused")
+    assert fp8.bytes_per_worker(d, w) == int8.bytes_per_worker(d, w)
+    assert fp8.messages(w) == int8.messages(w) == bf16.messages(w) \
+        == 2 * (w - 1)
+    layout = hop_message_layout(-(-d // w), block=4096)
+    assert int8.bytes_per_worker(d, w) == 2 * (w - 1) * layout.message_bytes
+    assert bf16.bytes_per_worker(d, w) == \
+        2 * (w - 1) * 2 * layout.payload_bytes
+    # the bf16 wire is heavier than int8+trailer but far below f32
+    assert bf16.bytes_per_worker(d, w) > int8.bytes_per_worker(d, w)
+    assert bf16.bytes_per_worker(d, w) < \
+        wire_formula(None).bytes_per_worker(d, w)

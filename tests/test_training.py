@@ -231,3 +231,82 @@ def test_compressed_fused_matches_compressed_training():
         print("FUSEDTRAIN_OK", np.abs(fused - xla).max())
     """)
     assert "FUSEDTRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_overlap_mode_matches_compressed_fused_training():
+    """The bucketed overlap pipeline is the same int8-fused arithmetic cut
+    into per-bucket rings, so it must train loss-for-loss with
+    "compressed-fused" — including across an elastic resize, where each
+    ring size re-plans its buckets."""
+    out = _run_subprocess("""
+        cfg = get_arch("granite-3-2b").reduced()
+        model = build_model(cfg)
+        data = SyntheticTokens(cfg.vocab, 16, 8, seed=1)
+
+        def run(mode):
+            tr = ElasticTrainer(model, make_optimizer("sgdm"), data,
+                                global_batch=8, base_lr=1e-2, mode=mode)
+            tr.run_slot(SlotPlan(workers=4, steps=2))
+            tr.run_slot(SlotPlan(workers=2, steps=2))
+            return np.array(tr.losses)
+
+        fused = run("compressed-fused")
+        overlap = run("compressed-fused-overlap")
+        np.testing.assert_allclose(overlap, fused, rtol=2e-2, atol=2e-2)
+        assert overlap[-1] < overlap[0], overlap
+        print("OVERLAPTRAIN_OK", np.abs(overlap - fused).max())
+    """)
+    assert "OVERLAPTRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_wire_mode_training_close_to_fused():
+    """bf16/fp8 wire modes run end-to-end through the trainer and stay
+    near the int8-fused trajectory (bf16 tight; fp8 within its 4-bit
+    mantissa budget)."""
+    out = _run_subprocess("""
+        cfg = get_arch("granite-3-2b").reduced()
+        model = build_model(cfg)
+        data = SyntheticTokens(cfg.vocab, 16, 8, seed=1)
+
+        def run(mode):
+            tr = ElasticTrainer(model, make_optimizer("sgdm"), data,
+                                global_batch=8, base_lr=1e-2, mode=mode)
+            tr.run_slot(SlotPlan(workers=4, steps=2))
+            tr.run_slot(SlotPlan(workers=2, steps=2))
+            return np.array(tr.losses)
+
+        fused = run("compressed-fused")
+        bf16 = run("bf16-fused")
+        fp8 = run("fp8-fused")
+        np.testing.assert_allclose(bf16, fused, rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(fp8, fused, rtol=8e-2, atol=8e-2)
+        assert bf16[-1] < bf16[0] and fp8[-1] < fp8[0]
+        print("WIRETRAIN_OK", np.abs(bf16 - fused).max())
+    """)
+    assert "WIRETRAIN_OK" in out
+
+
+def test_overlap_step_buckets_price_to_wire_formula():
+    """Traced "compressed-fused-overlap" step: per-bucket ppermute chains
+    whose message count and total payload bytes equal wire_formula over the
+    reverse-autodiff bucket plan (the identity check_step_pricing
+    enforces, pinned here at the training layer)."""
+    from repro.analysis import collectives as coll
+    from repro.core.rar_model import wire_formula
+    from repro.dist.overlap import plan_bucket_sizes
+    from repro.dist.registry import STEP_MODES
+
+    w = 4
+    closed, _, _, leaf_sizes = coll.trace_train_step(
+        "compressed-fused-overlap", w)
+    sites = [s for s in coll.collect_collectives(closed)
+             if s.primitive == "ppermute"]
+    spec = STEP_MODES["compressed-fused-overlap"]
+    segs = list(plan_bucket_sizes(leaf_sizes, spec.n_buckets, reverse=True))
+    formula = wire_formula("int8-fused")
+    assert sum(s.repeat for s in sites) == \
+        len(segs) * formula.messages(w)
+    assert sum(s.nbytes * s.repeat for s in sites) == \
+        sum(formula.bytes_per_worker(seg, w) for seg in segs)
