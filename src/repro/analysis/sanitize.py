@@ -25,7 +25,13 @@ incrementally, and raises :class:`SanitizerError` on the first divergence:
   * **wire-formula agreement** — for every scheduled job priced with a
     compressed ring, ``repro.core.rar_model``'s byte/message formulas must
     equal ``repro.dist.compression``'s executable accounting (checked once
-    per distinct profile).
+    per distinct profile);
+  * **serving accounting** — every ``slo_attainment`` a backend reports in
+    ``outcome.measured`` must *exactly* equal the attainment re-derived from
+    the run's event log (``RequestFirstToken`` / ``RequestCompletion``
+    events against the job's SLO targets): the log is the ground truth a
+    replay sees, so a reported value the log cannot reproduce means the
+    backend served requests it never logged (or vice versa).
 
 The sanitizer only *reads* driver state — it never draws RNG, never mutates
 the caches it checks — so a sanitized run produces a bit-identical
@@ -86,7 +92,7 @@ class SlotSanitizer:
         self._wire_checked: Set[Tuple[float, str]] = set()
 
     # -- entry point --------------------------------------------------------
-    def check_slot(self, *, ctx, committed, outcome) -> None:
+    def check_slot(self, *, ctx, committed, outcome, events=None) -> None:
         self._check_outcome(ctx, committed, outcome)
         self._check_resource_conservation(ctx)
         self._check_budgets(ctx)
@@ -94,6 +100,8 @@ class SlotSanitizer:
             self._check_utility_cache(ctx)
         for emb in committed:
             self._check_wire_formulas(ctx.state.inst.job(emb.job_id))
+        if events is not None:
+            self._check_serving(ctx, outcome, events)
 
     # -- execution factors ---------------------------------------------------
     def _check_outcome(self, ctx, committed, outcome) -> None:
@@ -238,6 +246,42 @@ class SlotSanitizer:
                     f"compression={prof.compression!r}): rar_model and "
                     "repro.dist.compression disagree on ppermutes per "
                     "all-reduce")
+
+    # -- serving accounting ---------------------------------------------------
+    def _check_serving(self, ctx, outcome, events) -> None:
+        """Reported SLO attainment must be re-derivable from the event log.
+
+        ``events`` is the driver's event log *including this slot's
+        execution-generated events*. For every job whose measured row
+        reports ``slo_attainment``, re-derive the cumulative attainment
+        from the logged ``RequestCompletion`` events and the job's SLO.
+        Exact float equality: both sides are one division of the same
+        integer counts, so any difference means the backend's internal
+        request records and the event log it emitted have diverged."""
+        for job_id in sorted(outcome.measured):
+            row = outcome.measured[job_id]
+            reported = row.get("slo_attainment") if isinstance(row, dict) \
+                else None
+            if reported is None:
+                continue
+            job = ctx.state.inst.job(job_id)
+            slo = getattr(job, "slo", None)
+            if slo is None:
+                self._fail(ctx, f"job {job_id} reports slo_attainment="
+                                f"{reported!r} but carries no SLO — only "
+                                "ServeJobs are scored against latency "
+                                "targets")
+            from repro.sched.serving import slo_attainment_from_events
+
+            derived = slo_attainment_from_events(events, job_id, slo)
+            if derived != reported:
+                self._fail(
+                    ctx, f"job {job_id} reported slo_attainment={reported!r}"
+                         f" but the event log re-derives {derived!r} — the "
+                         "backend's request accounting and the logged "
+                         "RequestFirstToken/RequestCompletion events have "
+                         "diverged (served requests that were never logged, "
+                         "or vice versa)")
 
     # -- helpers --------------------------------------------------------------
     def _fail(self, ctx, message: str) -> None:

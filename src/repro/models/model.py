@@ -74,6 +74,98 @@ class BaseModel:
         """Modality-frontend stub inputs (patch/frame embeddings)."""
         return {}
 
+    def steady_decode_cache(self, params, cache):
+        """Cast cache leaves to the dtypes one ``decode_step`` application
+        emits (its dtype fixed point).
+
+        Some families return a cache leaf wider than its spec (e.g. the
+        Mamba2 conv window comes back f32 against a bf16 spec). A loop that
+        feeds the cache straight back (the retired token-by-token serve
+        loop) silently re-traces once and then *carries* the wider dtype;
+        a ``lax.scan`` or a fixed-shape compiled step must instead pick one
+        dtype up front — coercing back to the spec dtype every step would
+        round the recurrent state each token and drift off the loop's
+        numerics. Casting the initial (zero) cache up front is lossless and
+        makes every later ``astype`` a no-op.
+        """
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        batch = jax.tree.leaves(cache)[0].shape[CACHE_BATCH_AXIS]
+        _, evolved = jax.eval_shape(
+            self.decode_step, params, abstract,
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+        return jax.tree.map(lambda x, s: x.astype(s.dtype), cache, evolved)
+
+    def decode_step_lanes(self, params, cache, tokens, positions):
+        """Per-lane decode: every batch lane advances at its *own* position.
+
+        ``decode_step`` takes one scalar ``cur_index`` shared by the whole
+        batch — fine for lock-step generation, useless for continuous
+        batching where lane b holds a request ``positions[b]`` tokens deep.
+        This wrapper vmaps the family's own ``decode_step`` over the cache's
+        batch axis (:data:`CACHE_BATCH_AXIS` — axis 1 of every leaf across
+        all families), so each lane runs the unmodified single-request
+        semantics at its private position.
+
+        tokens ``(B, 1)`` int32, positions ``(B,)`` int32 ->
+        (logits ``(B, 1, Vp)``, cache).
+        """
+
+        def one(lane_cache, tok, pos):
+            c = jax.tree.map(lambda x: jnp.expand_dims(x, CACHE_BATCH_AXIS),
+                             lane_cache)
+            logits, new_c = self.decode_step(params, c, tok[None, :], pos)
+            return logits[0], jax.tree.map(
+                lambda x: jnp.squeeze(x, CACHE_BATCH_AXIS), new_c)
+
+        return jax.vmap(
+            one, in_axes=(CACHE_BATCH_AXIS, 0, 0),
+            out_axes=(0, CACHE_BATCH_AXIS),
+        )(cache, tokens, positions)
+
+
+# Every family lays its decode cache out as (layers, batch, ...): the batch
+# ("lane") axis is uniformly axis 1 of every leaf — KV (dense/moe/hybrid/
+# encdec self+cross), SSM/conv state (mamba2), and wkv/shift state (rwkv6).
+# The lane helpers below and decode_step_lanes all key off this single
+# constant, so a family with a different layout fails loudly in one place.
+CACHE_BATCH_AXIS = 1
+
+
+def cache_lane(cache, lane):
+    """Read-only view of one lane (batch index kept, size 1) of a cache."""
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, lane, 1,
+                                               axis=CACHE_BATCH_AXIS),
+        cache)
+
+
+def set_cache_lane(cache, lane_cache, lane):
+    """Write a single-lane cache (batch size 1 at the lane axis) into
+    ``cache`` at batch index ``lane``; dtypes follow the destination."""
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), lane, axis=CACHE_BATCH_AXIS),
+        cache, lane_cache)
+
+
+def zero_cache_lane(cache, lane):
+    """Zero one lane of every cache leaf — the evict/admit barrier.
+
+    Attention caches are self-masking (``kpos <= cur_index`` hides stale
+    keys), but recurrent state (SSM/conv/wkv/token-shift) is *not*: a new
+    request prefilling into a lane still holding its predecessor's state
+    would be conditioned on a conversation it never saw.
+    """
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_update_slice_in_dim(
+            x, jnp.zeros_like(
+                jax.lax.dynamic_slice_in_dim(x, lane, 1,
+                                             axis=CACHE_BATCH_AXIS)),
+            lane, axis=CACHE_BATCH_AXIS),
+        cache)
+
 
 def masked_lm_head(h, w, vocab: int):
     """Logits over the padded vocab with pad slots masked to -inf (exact CE

@@ -19,6 +19,11 @@ MPI DDL jobs):
     binding decisions to an executor: :class:`AnalyticBackend` (closed-form
     pricing, the default) or :class:`LiveBackend` (real elastic JAX training
     with measured progress and online bandwidth recalibration);
+  * :mod:`repro.sched.serving`  — inference as a first-class job class:
+    :class:`ServeJob` with latency-SLO utilities (TTFT/TPOT mapped onto the
+    paper's sigmoid shapes) and :class:`ServingBackend`, which executes
+    serve slots on continuous-batching decode engines and emits the request
+    lifecycle back into the event log;
   * :mod:`repro.sched.registry` — schedulers resolved by name
     (``registry.create("gadget", seed=0)``).
 
@@ -29,12 +34,17 @@ targeting a new execution substrate means writing a backend, not a driver.
 from repro.sched.events import (  # noqa: F401
     ClusterEvent,
     CompositeEventStream,
+    DiurnalRequestStream,
     EmbeddingCommitted,
     EventStream,
     FaultConfig,
     FaultEventStream,
     JobArrival,
     JobCompletion,
+    RequestArrival,
+    RequestCompletion,
+    RequestFirstToken,
+    RequestStreamConfig,
     ScriptedEventStream,
     ServerFailure,
     ServerRecovery,
@@ -62,6 +72,13 @@ from repro.sched.backend import (  # noqa: F401
     LiveBackend,
     SlotExecution,
     SlotOutcome,
+)
+from repro.sched.serving import (  # noqa: F401
+    ServeJob,
+    ServeSLO,
+    ServingBackend,
+    make_serve_job,
+    slo_attainment_from_events,
 )
 from repro.sched.driver import OnlineDriver  # noqa: F401
 from repro.sched import registry  # noqa: F401

@@ -61,12 +61,17 @@ class SlotExecution:
     ``ctx`` is the slot's :class:`SchedulerContext` (resource state with the
     decision already committed, straggler map, contention pricing); ``wave``
     holds the servers that failed *after* placement (their rings lose the
-    slot); ``left`` maps job id -> workers departing mid-slot.
+    slot); ``left`` maps job id -> workers departing mid-slot;
+    ``pre_events`` carries the slot's pre-decision event batch (arrivals,
+    ticks — whatever the streams emitted) so workload-driven backends (e.g.
+    serving, which consumes ``RequestArrival``) see the same events the
+    driver dispatched, in the same order.
     """
 
     ctx: SchedulerContext
     wave: frozenset = frozenset()
     left: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    pre_events: Tuple = ()
 
     @property
     def t(self) -> int:
@@ -82,7 +87,10 @@ class SlotOutcome:
     fair-share slowdowns of the rings that ran (feeds the slot record);
     ``lost`` counts rings voided by the mid-slot failure wave; ``measured``
     carries backend-specific per-job measurements (the live backend reports
-    loss/steps/ring sizes — analytic execution leaves it empty).
+    loss/steps/ring sizes — analytic execution leaves it empty); ``events``
+    are execution-generated :class:`~repro.sched.events.ClusterEvent`\\ s
+    (e.g. the serving backend's request lifecycle) that the driver appends
+    to the event log and dispatches to the scheduler after commit.
     """
 
     factors: List[float]
@@ -91,6 +99,7 @@ class SlotOutcome:
     measured: Dict[int, Dict[str, object]] = dataclasses.field(
         default_factory=dict
     )
+    events: List = dataclasses.field(default_factory=list)
 
 
 @runtime_checkable

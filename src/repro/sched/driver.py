@@ -66,6 +66,9 @@ from repro.sched.events import (
     FaultEventStream,
     JobArrival,
     JobCompletion,
+    RequestArrival,
+    RequestCompletion,
+    RequestFirstToken,
     ServerFailure,
     ServerRecovery,
     SlotTick,
@@ -173,6 +176,11 @@ class OnlineDriver:
                     straggling[ev.server_id] = ev.factor
                 elif isinstance(ev, StragglerEnd):
                     straggling.pop(ev.server_id, None)
+                elif isinstance(ev, RequestArrival):
+                    # no driver state: the scheduler prices the backlog via
+                    # on_event below, and the serving backend consumes the
+                    # arrival from SlotExecution.pre_events
+                    pass
 
             res = ResourceState(
                 inst.graph, oversubscription=self.contention.oversubscription
@@ -232,7 +240,8 @@ class OnlineDriver:
                     "scheduler must commit embeddings"
             outcome = self.backend.execute_slot(
                 decision,
-                SlotExecution(ctx=ctx, wave=frozenset(wave), left=left),
+                SlotExecution(ctx=ctx, wave=frozenset(wave), left=left,
+                              pre_events=tuple(pre)),
             )
             if len(outcome.factors) != len(committed):
                 raise ValueError(
@@ -249,9 +258,21 @@ class OnlineDriver:
             # z + history accounting via the single shared path
             state.commit_slot(committed, outcome.factors)
 
+            # execution-generated events (the serving backend's request
+            # lifecycle) join the log before the sanitizer runs, so its
+            # serving-accounting check re-derives SLO attainment from
+            # exactly the log a replay of this run would see
+            for ev in outcome.events:
+                if isinstance(ev, (RequestFirstToken, RequestCompletion)):
+                    # explicitly log-only: TTFT/TPOT/attainment are derived
+                    # from the event log, never from driver state
+                    pass
+                log.append(ev)
+                sched.on_event(ev, ctx)
+
             if sanitizer is not None:  # read-only invariant re-derivation
                 sanitizer.check_slot(ctx=ctx, committed=committed,
-                                     outcome=outcome)
+                                     outcome=outcome, events=log)
 
             # completion check over the candidate set only: the initial sweep
             # (t=0) covers jobs whose budget starts exhausted; afterwards only

@@ -24,6 +24,16 @@ event rather than a hardcoded branch of a slot loop:
   * :class:`EmbeddingCommitted` — one ring placement (x, y, r) committed for
     a job this slot; the event log therefore fully determines per-job
     first-scheduling slots (queueing delay) and completion (makespan).
+  * :class:`RequestArrival` — one inference request for a serve job
+    (PR 10): pre-slot, so the scheduler prices the backlog before placing
+    rings; consumed by the serving backend, which enqueues it on the job's
+    continuous-batching engine.
+  * :class:`RequestFirstToken` / :class:`RequestCompletion` — emitted by the
+    serving backend *from execution* (they ride back on the slot outcome and
+    the driver appends them to the log), so TTFT/TPOT and SLO attainment are
+    recomputable from the event log alone — the runtime sanitizer's
+    serving-accounting check re-derives attainment from these events and
+    compares it with the backend's reported per-slot value.
 
 Streams are *seeded and replayable*: ``reset()`` rewinds to the initial RNG
 state, so the same stream replayed against the same scheduler reproduces the
@@ -33,7 +43,7 @@ exact same run (the event-replay determinism contract).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -99,6 +109,45 @@ class EmbeddingCommitted(ClusterEvent):
 
     job_id: int
     n_workers: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestArrival(ClusterEvent):
+    """One inference request for serve job ``job_id`` arrives at slot ``t``.
+
+    ``prompt_len``/``max_new`` are in tokens; ``request_id`` is unique per
+    job (the serving backend synthesizes the deterministic prompt content
+    from ``(job_id, request_id)``, so a replayed stream reproduces the
+    byte-identical workload).
+    """
+
+    job_id: int
+    request_id: int
+    prompt_len: int = 8
+    max_new: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestFirstToken(ClusterEvent):
+    """Request ``request_id`` produced its first token at slot ``t``
+    (``ttft_slots`` = t - arrival slot, the time-to-first-token)."""
+
+    job_id: int
+    request_id: int
+    ttft_slots: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestCompletion(ClusterEvent):
+    """Request ``request_id`` finished at slot ``t`` having generated
+    ``n_tokens`` over ``decode_slots`` slots since its first token (so
+    TPOT = decode_slots / max(n_tokens - 1, 1) slots per token)."""
+
+    job_id: int
+    request_id: int
+    n_tokens: int
+    ttft_slots: int
+    decode_slots: int
 
 
 @dataclasses.dataclass
@@ -222,3 +271,68 @@ class CompositeEventStream(EventStream):
 
     def mid_slot(self, t: int) -> List[ClusterEvent]:
         return [e for s in self.streams for e in s.mid_slot(t)]
+
+
+@dataclasses.dataclass
+class RequestStreamConfig:
+    """Diurnal-bursty request arrivals for one serve job (PR 10).
+
+    Per slot inside ``[start, end)`` the request count is Poisson at a rate
+    modulated by a sinusoidal diurnal cycle,
+    ``base_rate * (1 + amplitude * sin(2*pi*(t - start)/period))``, plus a
+    Bernoulli burst of ``burst_size`` extra requests with probability
+    ``burst_prob`` (the flash crowd). Prompt and generation lengths are
+    drawn uniformly from the inclusive ranges. Everything is drawn from one
+    seeded generator in a fixed per-slot order, so ``reset()`` replays the
+    identical trace.
+    """
+
+    job_id: int
+    start: int = 0
+    end: Optional[int] = None           # exclusive; None = no end
+    base_rate: float = 2.0              # mean requests per slot
+    amplitude: float = 0.5              # diurnal modulation in [0, 1]
+    period: int = 24                    # slots per diurnal cycle
+    burst_prob: float = 0.1
+    burst_size: int = 6
+    prompt_len: tuple = (4, 12)         # inclusive range, tokens
+    max_new: tuple = (4, 24)            # inclusive range, tokens
+    seed: int = 0
+
+
+class DiurnalRequestStream(EventStream):
+    """Seeded, replayable diurnal/bursty :class:`RequestArrival` source.
+
+    All arrivals are *pre-slot*: the scheduler sees the backlog grow before
+    it places rings, so a burst slot can reclaim workers from training jobs
+    through the ordinary utility pricing, and the serving backend admits
+    the new requests onto free cache lanes in the same slot.
+    """
+
+    def __init__(self, cfg: RequestStreamConfig):
+        self.cfg = cfg
+        self.reset()
+
+    def reset(self) -> None:
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self._next_id = 0
+
+    def pre_slot(self, t: int) -> List[ClusterEvent]:
+        cfg = self.cfg
+        if t < cfg.start or (cfg.end is not None and t >= cfg.end):
+            return []
+        rate = cfg.base_rate * (
+            1.0 + cfg.amplitude
+            * np.sin(2.0 * np.pi * (t - cfg.start) / max(cfg.period, 1)))
+        n = int(self.rng.poisson(max(rate, 0.0)))
+        if self.rng.random() < cfg.burst_prob:
+            n += int(cfg.burst_size)
+        out: List[ClusterEvent] = []
+        for _ in range(n):
+            p = int(self.rng.integers(cfg.prompt_len[0],
+                                      cfg.prompt_len[1] + 1))
+            m = int(self.rng.integers(cfg.max_new[0], cfg.max_new[1] + 1))
+            out.append(RequestArrival(t, cfg.job_id, self._next_id,
+                                      prompt_len=p, max_new=m))
+            self._next_id += 1
+        return out
